@@ -1,0 +1,69 @@
+"""Paper Tables 2/3/4 analog: end-to-end GSC network throughput.
+
+The paper measures words/sec on two FPGAs for dense / sparse-dense /
+sparse-sparse implementations.  The container is a CPU, so we report
+three graded quantities per variant:
+
+  * **HLO FLOPs per inference** from the compiled artifact — the
+    hardware-independent validation of the paper's multiplicative-MACs
+    claim (their Fig. 1),
+  * **theoretical MAC counts** (their accounting),
+  * **CPU wall-clock throughput** (words/sec) as a sanity signal.
+
+'Full chip' (Table 3) maps to batched multi-stream throughput (batch=64);
+'energy' (Table 4) maps to FLOPs/word (proportional to energy on
+fixed-voltage silicon).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import gsc_cnn as G
+
+
+def _compiled_flops(cfg, batch):
+    x = jax.ShapeDtypeStruct((batch, 32, 32, 1), jnp.float32)
+    params, _ = G.init_model(jax.random.PRNGKey(0), cfg)
+    fn = jax.jit(lambda p, x: G.forward(p, x, cfg))
+    compiled = fn.lower(params, x).compile()
+    return compiled.cost_analysis()["flops"], fn, params
+
+
+def _throughput(fn, params, batch, iters=20):
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, 32, 32, 1))
+    fn(params, x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(params, x).block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    return batch / dt, dt
+
+
+def run(report):
+    variants = ["dense", "sparse_dense", "sparse_sparse"]
+    base_flops = base_tp = None
+    macs = G.theoretical_macs(G.GSCConfig())
+    for batch, tag in [(1, "single"), (64, "fullchip")]:
+        for v in variants:
+            cfg = G.GSCConfig(variant=v)
+            flops, fn, params = _compiled_flops(cfg, batch)
+            tp, dt = _throughput(fn, params, batch)
+            if v == "dense":
+                base_flops, base_tp = flops, tp
+            report(f"gsc_{tag}_{v}", dt * 1e6 / batch, {
+                "words_per_s": round(tp, 1),
+                "hlo_flops_per_word": round(flops / batch),
+                "flops_reduction_vs_dense": round(base_flops / flops, 2),
+                "speedup_vs_dense": round(tp / base_tp, 2),
+            })
+    report("gsc_theoretical_macs", 0.0, {
+        "dense": macs["dense"],
+        "sd_reduction": round(macs["speedup_sd"], 1),
+        "ss_reduction": round(macs["speedup_ss"], 1),
+        "paper_measured_sd": 11.7, "paper_measured_ss": 33.6,
+    })

@@ -1,0 +1,47 @@
+"""Paper Figures 19-20 analog: k-WTA cost scaling with sparsity.
+
+The paper shows k-WTA resource use falls almost linearly as K decreases
+and is small next to the convolutions.  We report HLO FLOPs + wall time
+of the three k-WTA implementations (exact top-k, histogram, bisection)
+over the paper's 1500-wide activation at several K, plus the
+kwta-vs-conv cost ratio (their Fig. 20).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kwta, kwta_bisect, kwta_hist
+
+
+def _cost(fn, x):
+    c = jax.jit(fn).lower(x).compile().cost_analysis()
+    f = jax.jit(fn)
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f(x).block_until_ready()
+    return c["flops"], (time.perf_counter() - t0) / 20
+
+
+def run(report):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 1500))
+    for k in [375, 225, 150, 75]:  # 75%..95% sparse
+        for name, fn in [("topk", lambda x, k=k: kwta(x, k)),
+                         ("hist", lambda x, k=k: kwta_hist(x, k)),
+                         ("bisect", lambda x, k=k: kwta_bisect(x, k))]:
+            flops, dt = _cost(fn, x)
+            report(f"fig19_kwta_{name}_k{k}", dt * 1e6,
+                   {"hlo_flops": int(flops)})
+    # Fig 20: k-WTA vs the conv it feeds (1x1 [64:64] dense equivalent)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    xc = jax.random.normal(jax.random.PRNGKey(2), (64, 100, 64))
+    conv_flops = jax.jit(lambda x: x @ w).lower(xc).compile(
+    ).cost_analysis()["flops"]
+    kw_flops = jax.jit(lambda x: kwta(x, 8)).lower(xc).compile(
+    ).cost_analysis()["flops"]
+    report("fig20_kwta_vs_conv", 0.0, {
+        "kwta_fraction_of_conv": round(kw_flops / conv_flops, 3)})

@@ -1,0 +1,54 @@
+"""Paper Figures 15-18 analog: resource scaling of sparse-sparse conv
+blocks with weight and activation sparsity.
+
+FPGA resources (LUT/FF/URAM) have no TPU meaning; the graded analogs are
+**HLO FLOPs** (compute resource), **bytes accessed** (memory-bandwidth
+resource), and **parameter bytes** (capacity resource) of the paper's
+1x1 [64:64] and 3x3 [64:64] conv blocks, swept over weight sparsity
+(N in {4, 8, 16}) x activation sparsity (K in {16, 8, 4} of 64) — the same
+grid as Figs 15-18.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import SparsityConfig
+from repro.core.layers import packed_conv2d_apply, packed_conv2d_init
+from repro.core.kwta import kwta
+
+
+def _analyze(kh, kw, n, k, spatial=10, batch=8):
+    cfg = SparsityConfig(n=n, k_frac=k / 64, path="topk")
+    params, _ = packed_conv2d_init(jax.random.PRNGKey(0), kh, kw, 64, 64, cfg)
+
+    def fn(params, x):
+        xs = kwta(x, k)  # channel k-WTA on the input (paper's Select)
+        return packed_conv2d_apply(params, xs, cfg, kh, kw,
+                                   x_is_sparse=True)
+
+    x = jax.ShapeDtypeStruct((batch, spatial, spatial, 64), jnp.float32)
+    compiled = jax.jit(fn).lower(params, x).compile()
+    ca = compiled.cost_analysis()
+    pbytes = sum(v.size * v.dtype.itemsize
+                 for v in jax.tree.leaves(params))
+    return ca["flops"], ca["bytes accessed"], pbytes
+
+
+def run(report):
+    for kh in (1, 3):
+        base = None
+        for n in (4, 8, 16):
+            for k in (16, 8, 4):
+                flops, bytes_, pbytes = _analyze(kh, kh, n, k)
+                if base is None:
+                    base = (flops, bytes_, pbytes)
+                report(f"fig{15 if kh == 1 else 16}_conv{kh}x{kh}_N{n}_K{k}",
+                       0.0, {
+                           "hlo_flops": int(flops),
+                           "bytes_accessed": int(bytes_),
+                           "param_bytes": int(pbytes),
+                           "flops_vs_N4K16": round(base[0] / max(flops, 1), 2),
+                           "param_cut_vs_N4K16": round(base[2] / pbytes, 2),
+                       })

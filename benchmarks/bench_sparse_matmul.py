@@ -1,0 +1,69 @@
+"""Paper Figure 6 analog: structured-sparsity matmul paths vs dense.
+
+The paper benchmarks OneAPI CSR/BSR sparse kernels on a CPU and shows
+unstructured sparsity barely helps while structure does.  Our analog
+compares, on a 1024x1024 matmul at several pack factors:
+
+  dense matmul | CS faithful path | CS decompress path | CS topk path
+
+reporting compiled HLO FLOPs (the structural claim) and CPU wall-time
+(the 'current hardware' sanity signal, same spirit as the paper's Fig. 6).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CSLayout, cs_matmul, cs_matmul_dense, cs_topk_matmul,
+                        kwta, make_routes, pack_dense, routes_to_mask)
+
+
+def _time(fn, *args, iters=10):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def _flops(fn, *args):
+    return jax.jit(fn).lower(*args).compile().cost_analysis()["flops"]
+
+
+def run(report):
+    d, b = 1024, 256
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, d))
+    w_dense = jax.random.normal(jax.random.PRNGKey(1), (d, d)) / 32.0
+    dense_fn = jax.jit(lambda x: x @ w_dense)
+    t_dense = _time(dense_fn, x)
+    f_dense = _flops(lambda x: x @ w_dense, x)
+    report("fig6_dense_1024", t_dense * 1e6, {"hlo_flops": f_dense})
+
+    for n in [4, 8, 16, 32]:
+        lay = CSLayout(d, d, n)
+        # shared routes (the MXU-shaped variant measured in §Perf)
+        g = lay.groups
+        route = jnp.asarray(make_routes(CSLayout(d, n, n), 0))
+        packed = jax.random.normal(jax.random.PRNGKey(n), (g, d // n, n)) / 32.0
+
+        had = jax.jit(lambda x: cs_matmul(x, packed, route))
+        dec = jax.jit(lambda x: cs_matmul_dense(x, packed, route))
+        k = d // n
+        xs = kwta(x, k)
+        top = jax.jit(lambda xs: cs_topk_matmul(xs, packed, route, k))
+
+        t_h, f_h = _time(had, x), _flops(lambda x: cs_matmul(x, packed, route), x)
+        t_d, f_d = _time(dec, x), _flops(lambda x: cs_matmul_dense(x, packed, route), x)
+        t_t, f_t = _time(top, xs), _flops(lambda xs: cs_topk_matmul(xs, packed, route, k), xs)
+        report(f"fig6_cs_faithful_n{n}", t_h * 1e6, {
+            "hlo_flops": f_h, "flops_cut": round(f_dense / f_h, 2),
+            "speedup": round(t_dense / t_h, 2)})
+        report(f"fig6_cs_decompress_n{n}", t_d * 1e6, {
+            "hlo_flops": f_d, "speedup": round(t_dense / t_d, 2)})
+        report(f"fig6_cs_sparse_sparse_n{n}", t_t * 1e6, {
+            "hlo_flops": f_t, "flops_cut": round(f_dense / f_t, 2),
+            "speedup": round(t_dense / t_t, 2)})

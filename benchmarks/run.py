@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Modules:
+  bench_gsc           — Tables 2/3/4 (end-to-end GSC throughput + energy)
+  bench_sparse_matmul — Figure 6 (structured-sparsity matmul paths)
+  bench_resources     — Figures 15-18 (conv-block resource scaling)
+  bench_kwta          — Figures 19-20 (k-WTA cost scaling)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only gsc,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+
+def _report(name: str, us_per_call: float, derived=None) -> None:
+    d = json.dumps(derived or {}, sort_keys=True).replace(",", ";")
+    print(f"{name},{us_per_call:.2f},{d}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: gsc,sparse_matmul,"
+                         "resources,kwta")
+    args = ap.parse_args()
+    from benchmarks import bench_gsc, bench_kwta, bench_resources, \
+        bench_sparse_matmul
+    mods = {"gsc": bench_gsc, "sparse_matmul": bench_sparse_matmul,
+            "resources": bench_resources, "kwta": bench_kwta}
+    sel = (args.only.split(",") if args.only else list(mods))
+    print("name,us_per_call,derived")
+    failed = []
+    for name in sel:
+        try:
+            mods[name].run(_report)
+        except Exception:  # noqa: BLE001 — report and continue
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

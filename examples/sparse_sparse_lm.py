@@ -1,0 +1,55 @@
+"""The paper's technique inside a transformer (their §6.4 direction):
+train a reduced LM with CS-packed FFNs + k-WTA, against the dense
+baseline, and compare compiled FLOPs per step + losses.
+
+Run: PYTHONPATH=src python examples/sparse_sparse_lm.py [--steps 60]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config
+from repro.core.api import DENSE, SparsityConfig
+from repro.data import batch_for
+from repro.launch.steps import make_train_step
+from repro.models import init_model
+from repro.optim import init_state
+
+
+class _Shape:
+    seq_len = 64
+    global_batch = 8
+
+
+def run(tag, sparsity, steps):
+    cfg = get_config("smollm-360m").reduced(
+        d_model=128, d_ff=512, vocab_size=512, n_heads=4, n_kv_heads=2,
+        head_pad=0, ffn_sparsity=sparsity)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    train_step, acfg = make_train_step(cfg, TrainConfig(lr=1e-3))
+    opt = init_state(params, acfg)
+    jitted = jax.jit(train_step)
+    b0 = {k: jnp.asarray(v) for k, v in batch_for(cfg, _Shape, 0).items()}
+    flops = jitted.lower(params, opt, b0).compile().cost_analysis()["flops"]
+    for s in range(steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in batch_for(cfg, _Shape, s).items()}
+        params, opt, m = jitted(params, opt, batch)
+    print(f"[{tag:13s}] final loss {float(m['loss']):.4f} "
+          f"step GFLOPs {flops/1e9:.3f}")
+    return flops
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    fd = run("dense", DENSE, args.steps)
+    fs = run("sparse-sparse",
+             SparsityConfig(n=4, k_frac=0.125, kwta_impl="bisect"),
+             args.steps)
+    print(f"FFN sparse-sparse cuts compiled step FLOPs by "
+          f"{fd / fs:.2f}x at n=4 (75% weight + 87.5% activation sparsity)")

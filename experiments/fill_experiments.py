@@ -1,0 +1,143 @@
+"""Regenerate the roofline table + hillclimb sections inside EXPERIMENTS.md
+from the results JSONs."""
+
+import json
+import re
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import get_config  # noqa: E402
+from repro.launch.roofline import analyze, cell_roofline, to_markdown  # noqa
+
+
+def terms(rec, arch):
+    cfg = get_config(arch)
+    rl = cell_roofline(rec, cfg)
+    return rl
+
+
+def fmt(rl):
+    return (f"compute {rl['compute_s']*1e3:.2f} ms / memory "
+            f"{rl['memory_s']*1e3:.2f} ms / collective "
+            f"{rl['collective_s']*1e3:.2f} ms -> **{rl['bottleneck']}**, "
+            f"MFU@bound {rl['mfu_at_bound']*100:.2f}%")
+
+
+def hillclimb_section():
+    base = json.load(open("experiments/dryrun_results.json"))
+    hc = json.load(open("experiments/hillclimb_results.json"))
+
+    def cell(name, arch, shape, variants, narrative, verdict=""):
+        key = f"{arch}|{shape}|pod1"
+        b = terms(base[key], arch)
+        lines = [f"#### {name}: `{arch} x {shape}`\n",
+                 f"Baseline: {fmt(b)}; mem/dev "
+                 f"{base[key]['full']['memory']['peak_bytes_est']/1e9:.1f} GB\n"]
+        lines.append(narrative + "\n")
+        lines.append("| variant | compute (ms) | memory (ms) | collective "
+                     "(ms) | bottleneck | Δ dominant | mem/dev (GB) |")
+        lines.append("|---|---|---|---|---|---|---|")
+        dom0 = b["bottleneck"] + "_s"
+        for tag, desc in variants:
+            k = f"{key}|{tag}"
+            if k not in hc or not hc[k].get("ok"):
+                lines.append(f"| {desc} | (failed/missing) | | | | | |")
+                continue
+            v = terms(hc[k], arch)
+            delta = b[dom0] / max(v[dom0], 1e-12)
+            lines.append(
+                f"| {desc} | {v['compute_s']*1e3:.2f} | "
+                f"{v['memory_s']*1e3:.2f} | {v['collective_s']*1e3:.2f} | "
+                f"{v['bottleneck']} | **{delta:.2f}x** | "
+                f"{hc[k]['full']['memory']['peak_bytes_est']/1e9:.1f} |")
+        if verdict:
+            lines.append("\n**Verdict:** " + verdict)
+        return "\n".join(lines) + "\n"
+
+    out = []
+    out.append(cell(
+        "Hillclimb A (worst memory-bound decode)", "musicgen_large",
+        "decode_32k",
+        [("int8kv", "int8 KV cache (per-row scales)"),
+         ("int8kv_n8", "int8 KV + CS pack n=8 on FFN weights"),
+         ("int8kv_owner", "int8 KV + shard_map row-owner cache write")],
+        "Hypothesis: decode is KV-cache-byte bound (48L x 128B x 32k x 32kv "
+        "x 64dh bf16 = 12.9 GB/device read+written per token); int8 "
+        "quantization should halve the memory term and the cache footprint, "
+        "with <2e-2 logit error (validated in tests). Packing FFN weights "
+        "n=8 removes another (3 d ff)/8 bytes per layer.",
+        verdict="**confirmed in direction, quantified**: footprint 24.4 -> "
+        "9.0 GB (2.7x — the cell now fits the 16 GB chip) and the memory "
+        "term improves 1.31x, not the naive 2x: the masked cache write "
+        "re-reads/writes the full cache and non-KV traffic (weights, "
+        "activations) shares the term. The extra n=8 FFN packing adds only "
+        "2% — at B=128 decode this arch is cache-dominated, exactly the "
+        "regime split predicted in DESIGN.md §2.1. Rung 3 (shard_map "
+        "row-owner cache write, cfg.cache_write='owner') removes the "
+        "masked write's redundant full-cache pass: memory term 60.5 -> "
+        "43.8 ms — **1.80x total** vs the 78.9 ms baseline, with the "
+        "collective term still ~0. Remaining traffic is the unavoidable "
+        "attention read of the full cache + weights; next: CS-pack the "
+        "attention projections."))
+    out.append(cell(
+        "Hillclimb B (most collective-bound, paper-relevant MoE)",
+        "qwen3_moe_235b_a22b", "train_4k",
+        [("cap10", "capacity factor 1.25 -> 1.0"),
+         ("cap10_n8", "capacity 1.0 + expert CS pack n=4 -> n=8")],
+        "Hypothesis: the MoE dispatch/combine traffic scales with the "
+        "(groups, E, C, d) buffer; capacity 1.25->1.0 cuts C by 20% "
+        "(dispatch collectives and buffer bytes follow); doubling the "
+        "paper's pack factor halves expert-weight FLOPs+bytes (trading "
+        "model quality studied in the paper's accuracy refs).",
+        verdict="**largely refuted — informative**: capacity 1.25->1.0 "
+        "moved compute -4.3% and memory -1.9% but the collective term not "
+        "at all: qwen3's step collectives are dominated by TP residual "
+        "all-reduces + ZeRO moment resharding, not MoE dispatch (the "
+        "grouped dispatch of finding 0.6 already made dispatch local). "
+        "Doubling the CS pack factor cuts another 9% of compute (expert "
+        "matmuls halve, attention doesn't) and 24 GB/device of weights+"
+        "states. The binding constraint stays memory traffic; the "
+        "prescription is remat-policy tuning + the Pallas packed kernel "
+        "(which removes decompress-boundary traffic), not dispatch work."))
+    out.append(cell(
+        "Hillclimb C (the paper's technique, R-ladder)", "smollm_360m",
+        "train_4k",
+        [("r64", "route_share G -> 64 (finer routing diversity)"),
+         ("dense_path", "decompress-to-dense path (MXU regime)"),
+         ("n8k16", "pack n=8 + k-WTA 6.25% winners")],
+        "Hypothesis (from finding 0.1): the routed-activation working set "
+        "scales as B*d_ff*G/R — R=64 should sit between R=1 (610 GB, "
+        "infeasible) and R=G (baseline) on memory, with identical FLOPs; "
+        "the dense path trades N x more MXU FLOPs for minimal temp; n=8 "
+        "halves FFN FLOPs again (the paper's own scaling axis).",
+        verdict="**R-ladder confirmed; crossover confirmed**: R=64 costs "
+        "1.57x on the memory term and +10 GB/device vs fully-shared routes "
+        "(610 GB at R=1, measured in 0.1 — the full ladder "
+        "R=1/8/64/G: 610/169/26/16 GB). The decompress path *beats* the "
+        "faithful path on every term at n=4 (memory 1.16x, compute 1.17x) "
+        "— exactly the DESIGN.md §2.1 prediction that below N~32 the MXU "
+        "regime wins under XLA; the faithful algorithm's N x advantage "
+        "requires the fused Pallas kernels (grouped_cs_matmul/"
+        "packed_matmul), which keep the routed working set in VMEM. n=8 + "
+        "6.25% k-WTA cuts compute 1.27x at unchanged memory — the paper's "
+        "sparsity axis works on FLOPs but this cell's roofline is bound by "
+        "bytes, so the MFU@bound needle moves only via traffic."))
+    return "\n".join(out)
+
+
+def main():
+    table = analyze()
+    md = to_markdown(table)
+    doc = open("EXPERIMENTS.md").read()
+    doc = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\nReading of the table)",
+                 "<!-- ROOFLINE_TABLE -->\n" + md + "\n",
+                 doc, flags=re.S)
+    doc = re.sub(r"<!-- HILLCLIMBS -->.*?(?=### Phase 2)",
+                 "<!-- HILLCLIMBS -->\n" + hillclimb_section() + "\n",
+                 doc, flags=re.S)
+    open("EXPERIMENTS.md", "w").write(doc)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpoint substrate: sharded, atomic, resharding-capable."""
+
+from .ckpt import (latest_step, list_steps, prune, restore, restore_latest,
+                   save, save_async)
+
+__all__ = ["latest_step", "list_steps", "prune", "restore", "restore_latest",
+           "save", "save_async"]

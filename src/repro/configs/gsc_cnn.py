@@ -1,0 +1,5 @@
+"""The paper's own architecture (Table 1): GSC keyword-spotting CNN."""
+
+from repro.models.gsc_cnn import GSCConfig
+
+CONFIG = GSCConfig()

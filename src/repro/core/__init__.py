@@ -1,0 +1,34 @@
+"""Complementary Sparsity — the paper's primary contribution as a composable
+JAX module.
+
+Public surface:
+
+* :class:`~repro.core.masks.CSLayout`, mask/route generation, packing.
+* :class:`~repro.core.api.SparsityConfig` — per-layer sparsity settings.
+* Execution paths (``cs_matmul`` faithful / ``cs_matmul_dense`` MXU /
+  ``cs_topk_matmul`` sparse-sparse) in :mod:`repro.core.functional`.
+* k-WTA activations in :mod:`repro.core.kwta`.
+* Layers (``packed_linear_*``, ``packed_conv2d_*``) in
+  :mod:`repro.core.layers`.
+"""
+
+from .api import DENSE, SparsityConfig, choose_path
+from .functional import (cs_matmul, cs_matmul_dense, cs_topk_matmul,
+                         decompress, flops_cs_matmul, flops_cs_topk,
+                         flops_dense)
+from .kwta import (activation_sparsity, kwta, kwta_bisect, kwta_hist,
+                   kwta_local, kwta_mask)
+from .masks import (CSLayout, conv_layout, make_mask, make_routes,
+                    pad_to_multiple, routes_to_mask, validate_complementary)
+from .packing import pack_conv, pack_dense, packed_bytes, unpack, unpack_conv
+
+__all__ = [
+    "DENSE", "SparsityConfig", "choose_path",
+    "cs_matmul", "cs_matmul_dense", "cs_topk_matmul", "decompress",
+    "flops_cs_matmul", "flops_cs_topk", "flops_dense",
+    "activation_sparsity", "kwta", "kwta_bisect", "kwta_hist", "kwta_local",
+    "kwta_mask",
+    "CSLayout", "conv_layout", "make_mask", "make_routes", "pad_to_multiple",
+    "routes_to_mask", "validate_complementary",
+    "pack_conv", "pack_dense", "packed_bytes", "unpack", "unpack_conv",
+]

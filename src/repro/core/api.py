@@ -1,0 +1,84 @@
+"""Public sparsity configuration + execution-path dispatch.
+
+``SparsityConfig`` is the single object model configs use to turn the
+paper's technique on for a layer family.  ``choose_path`` encodes the
+regime analysis of DESIGN.md §2.1:
+
+* sparse-sparse (``topk``) wins when B·K < D_in (small-batch serving),
+* the faithful VPU Hadamard path wins when N >= vpu_crossover (~32),
+* otherwise the MXU decompress path (``dense``) — dense-rate compute from
+  1/N the weight memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+Path = Literal["auto", "hadamard", "dense", "topk"]
+
+#: MXU:VPU per-cycle FLOP ratio on TPU v5e (128x128 MXU vs 8x128 VPU).
+VPU_CROSSOVER_N = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Per-layer-family complementary-sparsity settings.
+
+    Attributes:
+      n: weight pack factor (density 1/n). n=1 disables weight sparsity.
+      k_frac: activation k-WTA keep-fraction (None disables k-WTA).
+      route_share: groups sharing one route table (1 = faithful paper
+        layout; 0 = all groups share one table — the MXU-shaped variant).
+      perm_kind: 'random' (faithful) or 'cyclic' (compressed routes).
+      path: execution path override ('auto' dispatches by regime).
+      kwta_impl: 'topk' (exact) or 'hist' (paper's histogram datapath).
+      kwta_partitions: local k-WTA partition count (0 = global).
+    """
+
+    n: int = 1
+    k_frac: Optional[float] = None
+    route_share: int = 1
+    perm_kind: str = "random"
+    path: Path = "auto"
+    kwta_impl: str = "topk"
+    kwta_partitions: int = 0
+
+    @property
+    def weight_sparse(self) -> bool:
+        return self.n > 1
+
+    @property
+    def activation_sparse(self) -> bool:
+        return self.k_frac is not None and self.k_frac < 1.0
+
+    def k_for(self, dim: int) -> int:
+        """Static K for a given feature dim (multiple of kwta_partitions)."""
+        if not self.activation_sparse:
+            return dim
+        k = max(1, int(round(dim * self.k_frac)))
+        parts = max(1, self.kwta_partitions)
+        k = max(parts, (k // parts) * parts)
+        return min(k, dim)
+
+
+DENSE = SparsityConfig()
+
+
+def choose_path(cfg: SparsityConfig, batch: int, d_in: int,
+                x_is_sparse: bool) -> str:
+    """Regime dispatch (DESIGN.md §2.1)."""
+    if cfg.path != "auto":
+        return cfg.path
+    if not cfg.weight_sparse:
+        return "dense"
+    if x_is_sparse and cfg.activation_sparse:
+        k = cfg.k_for(d_in)
+        if batch * k < d_in:
+            return "topk"
+    if cfg.n >= VPU_CROSSOVER_N:
+        return "hadamard"
+    # Moderate N: on TPU the MXU decompress kernel wins on compute; the
+    # faithful path still wins on HLO-visible FLOPs. We default to the
+    # faithful algorithm (paper baseline); perf configs override to 'dense'.
+    return "hadamard"

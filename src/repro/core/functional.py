@@ -1,0 +1,146 @@
+"""Differentiable execution paths for complementary-sparse linear maps.
+
+Three interchangeable paths compute ``y = x @ W + b`` where W is an
+(unmaterialized) complementary-sparse weight held as ``(packed, route)``:
+
+1. ``cs_matmul`` — the **faithful paper algorithm** (Multiply → Route → Sum,
+   §3.1/3.2) with routing hoisted offline into the weight layout, so the
+   runtime re-orders *activations* with a static gather and contracts.
+   FLOPs = 2·B·D_in·D_out/N (the paper's N× MAC reduction, exactly).
+
+2. ``cs_matmul_dense`` — decompress-to-dense then matmul. FLOPs are dense but
+   at-rest storage and (inside the Pallas kernel, see kernels/packed_matmul.py)
+   HBM traffic are 1/N. This is the MXU-regime path.
+
+3. ``cs_topk_matmul`` — the **sparse-sparse** path (§3.2): only the K
+   non-zero activations fetch weight columns.
+   FLOPs = 2·B·K·D_out (activation savings × the N× weight-memory savings).
+
+Route sharing (beyond-paper, see DESIGN.md §3): ``route`` may be shared by
+chunks of R consecutive output groups (shape (G/R, P, N)).  R=1 is the
+faithful unconstrained layout; larger R turns the faithful path's contraction
+into MXU-shaped (B,P)x(P,R) matmuls and divides the routed-activation
+working set by R, at the cost of connectivity diversity.  All paths accept
+any R; the algebra is identical.
+
+Everything here is pure jnp and differentiable; JAX's autodiff transposes the
+static gathers into static scatters, so the backward pass keeps the same
+sparse operation count (no dense D_in×D_out object is ever built in path 1
+or 3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _layout_from(packed: jax.Array, route: jax.Array):
+    """Infer (G, P, N, R) from packed (G,P,N) and route (G/R,P,N)."""
+    g, p, n = packed.shape
+    gr = route.shape[0]
+    if route.shape[1:] != (p, n) or g % gr:
+        raise ValueError(f"incompatible packed {packed.shape} / route {route.shape}")
+    return g, p, n, g // gr
+
+
+def route_to_gather_idx(route: jax.Array, n: int) -> jax.Array:
+    """Flat input indices idx[gr,p,s] = p*N + route[gr,p,s] (int32)."""
+    p = route.shape[1]
+    return (jnp.arange(p, dtype=jnp.int32)[None, :, None] * n
+            + route.astype(jnp.int32))
+
+
+def cs_matmul(x: jax.Array, packed: jax.Array, route: jax.Array) -> jax.Array:
+    """Faithful Multiply→Route→Sum path.
+
+    Args:
+      x: (..., D_in)
+      packed: (G, P, N) pre-routed packed weights.
+      route: (G/R, P, N) int permutations.
+
+    Returns: (..., D_out = G*N)
+    """
+    g, p, n, r = _layout_from(packed, route)
+    batch = x.shape[:-1]
+    idx = route_to_gather_idx(route, n)          # (Gr, P, N) int32
+    # Route the activations (static gather — the offline'd crossbar).
+    xg = x[..., idx]                              # (..., Gr, P, N)
+    pk = packed.reshape(g // r, r, p, n)          # (Gr, R, P, N)
+    # Multiply + Sum: contract partitions. For R>1 this is a true matmul.
+    y = jnp.einsum("...ups,urps->...urs", xg, pk)  # (..., Gr, R, N)
+    return y.reshape(*batch, g * n)
+
+
+def decompress(packed: jax.Array, route: jax.Array) -> jax.Array:
+    """Materialize the sparse dense-format W (D_in, D_out) on device.
+
+    Oracle + input to the dense-matmul path. The transpose of this scatter is
+    a gather, so autodiff projects dense gradients back onto the packed
+    support for free (masked-gradient training, paper §4 "static binary
+    mask").
+    """
+    g, p, n, r = _layout_from(packed, route)
+    idx = route_to_gather_idx(route, n)           # (Gr, P, N)
+    idx_full = jnp.broadcast_to(idx[:, None], (g // r, r, p, n)).reshape(g, p, n)
+    w = jnp.zeros((p * n, g, n), packed.dtype)
+    # w[idx_full[g,p,s], g, s] = packed[g,p,s]
+    gg = jnp.arange(g, dtype=jnp.int32)[:, None, None]
+    ss = jnp.arange(n, dtype=jnp.int32)[None, None, :]
+    w = w.at[idx_full, gg, ss].set(packed)
+    return w.reshape(p * n, g * n)
+
+
+def cs_matmul_dense(x: jax.Array, packed: jax.Array, route: jax.Array) -> jax.Array:
+    """Decompress-then-matmul (MXU path; XLA fallback of the Pallas kernel)."""
+    w = decompress(packed, route)
+    return x @ w
+
+
+def cs_topk_matmul(x: jax.Array, packed: jax.Array, route: jax.Array,
+                   k: int) -> jax.Array:
+    """Sparse-sparse path: contract only the K largest-|x| positions.
+
+    Exact whenever x is k-sparse with at most ``k`` non-zeros (the k-WTA
+    contract); otherwise it is the paper's semantics of dropping all but the
+    top-K contributions.
+
+    Args:
+      x: (..., D_in), expected k-sparse (output of k-WTA).
+      k: static number of non-zeros to process.
+    """
+    g, p, n, r = _layout_from(packed, route)
+    batch = x.shape[:-1]
+    # Select: support of the sparse activation (any superset of the true
+    # support is exact, since the extra entries multiply by x==0).
+    _, sel = lax.top_k(jnp.abs(x), k)             # (..., K) indices
+    vals = jnp.take_along_axis(x, sel, axis=-1)   # (..., K)
+    p_idx = sel // n                              # (..., K) partition of each nz
+    s_off = sel % n                               # (..., K) offset in partition
+    # Fetch the packed weight rows of the selected partitions. jnp.take with
+    # multi-dim indices inserts them in place of axis 1:
+    # packed (G, P, N) -> (G, ..., K, N); move G after K.
+    wrow = jnp.take(packed, p_idx, axis=1)        # (G, ..., K, N)
+    wrow = jnp.moveaxis(wrow, 0, -2)              # (..., K, G, N)
+    rrow = jnp.take(route, p_idx, axis=1)         # (Gr, ..., K, N)
+    rrow = jnp.moveaxis(rrow, 0, -2)              # (..., K, Gr, N)
+    # An activation at offset s_off only owns slot s where route == s_off.
+    hit = (rrow == s_off[..., None, None].astype(rrow.dtype))  # (..., K, Gr, N)
+    hit = jnp.repeat(hit, r, axis=-2) if r > 1 else hit        # (..., K, G, N)
+    contrib = wrow * hit.astype(wrow.dtype)       # (..., K, G, N)
+    y = jnp.einsum("...k,...kgs->...gs", vals, contrib)
+    return y.reshape(*batch, g * n)
+
+
+def flops_cs_matmul(batch: int, d_in: int, d_out: int, n: int) -> int:
+    """Theoretical MAC*2 count of the faithful path (the paper's claim)."""
+    return 2 * batch * d_in * d_out // n
+
+
+def flops_cs_topk(batch: int, k: int, d_out: int) -> int:
+    return 2 * batch * k * d_out
+
+
+def flops_dense(batch: int, d_in: int, d_out: int) -> int:
+    return 2 * batch * d_in * d_out

@@ -1,0 +1,218 @@
+"""Parameterized layers: dense and complementary-sparse linear / conv2d.
+
+Functional style (no framework): each layer is an ``init(key, ...) ->
+(params, specs)`` + ``apply(params, x, ...)`` pair.  ``specs`` mirrors the
+params pytree with logical-axis tuples consumed by repro.sharding.
+
+Packed layers hold:
+  packed  (G, P, N)  float   — pre-routed packed weights (trainable)
+  route   (G/R, P, N) int8   — static complementary routing (not trainable)
+  bias    (D_out,)    float  — optional
+
+The packed weight's group dim G is the sharding analog of D_out: tensor
+parallelism shards G exactly like a dense layer shards its output features,
+and each shard carries its own slice of the route table.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import functional as F
+from .api import SparsityConfig, choose_path
+from .kwta import kwta, kwta_bisect, kwta_hist, kwta_local
+from .masks import CSLayout, make_routes
+from .packing import pack_dense
+
+
+# ---------------------------------------------------------------------------
+# Dense linear (baseline)
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = True,
+                out_axis: str = "mlp", in_axis: Optional[str] = None,
+                dtype=jnp.float32):
+    k_w, _ = jax.random.split(key)
+    scale = 1.0 / np.sqrt(d_in)
+    params = {"w": jax.random.uniform(k_w, (d_in, d_out), dtype, -scale, scale)}
+    specs = {"w": (in_axis, out_axis)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        specs["b"] = (out_axis,)
+    return params, specs
+
+
+def linear_apply(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Complementary-sparse packed linear
+# ---------------------------------------------------------------------------
+
+def packed_linear_init(key, d_in: int, d_out: int, cfg: SparsityConfig,
+                       bias: bool = True, seed: int = 0,
+                       out_axis: str = "mlp", dtype=jnp.float32):
+    """Initialize a packed CS linear layer.
+
+    Initialization matches a dense layer restricted to the CS support: each
+    output has fan-in D_in/N, so we scale by sqrt(N/D_in) (sparse-aware init,
+    crucial for trainability at high sparsity).
+
+    Dims that don't divide the pack factor are transparently padded (the
+    paper's sets need not all be full, §3: 'the restriction applies only to
+    each set being combined'); ``packed_linear_apply`` pads inputs / slices
+    outputs back. The bias (when present) carries the logical d_out.
+    """
+    from .masks import pad_to_multiple
+    d_in_p = pad_to_multiple(d_in, cfg.n)
+    d_out_p = pad_to_multiple(d_out, cfg.n)
+    layout = CSLayout(d_in_p, d_out_p, cfg.n, cfg.perm_kind)
+    d_in, d_out_logical, d_out = d_in_p, d_out, d_out_p
+    g, p, n = layout.groups, layout.partitions, layout.n
+    r = g if cfg.route_share == 0 else min(cfg.route_share, g)
+    while g % r:  # fall back to the nearest divisor
+        r -= 1
+    route_np = make_routes(CSLayout(d_in, n * (g // r), n, cfg.perm_kind), seed)
+    scale = np.sqrt(cfg.n / d_in)
+    packed = jax.random.uniform(key, (g, p, n), dtype, -scale, scale)
+    params = {"packed": packed, "route": jnp.asarray(route_np)}
+    specs = {"packed": (out_axis, None, None), "route": (out_axis, None, None)}
+    if bias:
+        params["b"] = jnp.zeros((d_out_logical,), dtype)
+        specs["b"] = (out_axis,)
+    return params, specs
+
+
+def packed_linear_from_dense(w: np.ndarray, cfg: SparsityConfig, seed: int = 0,
+                             bias: Optional[np.ndarray] = None):
+    """Pack an existing (masked) dense weight (the paper's offline Combine)."""
+    d_in, d_out = w.shape
+    layout = CSLayout(d_in, d_out, cfg.n, cfg.perm_kind)
+    g = layout.groups
+    r = g if cfg.route_share == 0 else min(cfg.route_share, g)
+    while g % r:
+        r -= 1
+    route = make_routes(CSLayout(d_in, layout.n * (g // r), layout.n,
+                                 cfg.perm_kind), seed)
+    route_full = np.broadcast_to(route[:, None], (g // r, r, *route.shape[1:]))
+    route_full = route_full.reshape(g, *route.shape[1:])
+    packed = pack_dense(layout, w, route_full)
+    params = {"packed": jnp.asarray(packed), "route": jnp.asarray(route)}
+    if bias is not None:
+        params["b"] = jnp.asarray(bias)
+    return params
+
+
+def packed_linear_apply(params, x, cfg: SparsityConfig,
+                        x_is_sparse: bool = False):
+    """Apply packed CS linear with regime dispatch (DESIGN.md §2.1).
+
+    Handles padded layouts: inputs are zero-padded up to P*N, outputs are
+    sliced back to the bias length (when a bias is present)."""
+    packed = params["packed"].astype(x.dtype)
+    route = params["route"]
+    d_in = packed.shape[1] * packed.shape[2]
+    if x.shape[-1] < d_in:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, d_in - x.shape[-1])]
+        x = jnp.pad(x, pad)
+    batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    path = choose_path(cfg, batch, d_in, x_is_sparse)
+    if path == "topk":
+        y = F.cs_topk_matmul(x, packed, route, cfg.k_for(d_in))
+    elif path == "dense":
+        y = F.cs_matmul_dense(x, packed, route)
+    else:
+        y = F.cs_matmul(x, packed, route)
+    if "b" in params:
+        b = params["b"]
+        y = y[..., :b.shape[0]] + b.astype(x.dtype)
+    return y
+
+
+def apply_kwta(x, cfg: SparsityConfig):
+    """Apply the configured k-WTA activation along the last axis."""
+    if not cfg.activation_sparse:
+        return x
+    k = cfg.k_for(x.shape[-1])
+    if cfg.kwta_impl == "hist":
+        return kwta_hist(x, k)
+    if cfg.kwta_impl == "bisect":
+        return kwta_bisect(x, k)
+    if cfg.kwta_partitions > 1:
+        return kwta_local(x, k, cfg.kwta_partitions)
+    return kwta(x, k)
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (dense + packed) — NHWC, via im2col so conv reuses the CS algebra
+# ---------------------------------------------------------------------------
+
+def _same_pad(x, kh, kw):
+    ph, pw = kh // 2, kw // 2
+    return jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: str = "VALID") -> jax.Array:
+    """Extract patches: (B, H, W, C) -> (B, OH, OW, kh*kw*C)."""
+    if padding == "SAME":
+        x = _same_pad(x, kh, kw)
+    b, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    patches = jnp.stack(
+        [x[:, i:i + oh * stride:stride, j:j + ow * stride:stride, :]
+         for i in range(kh) for j in range(kw)], axis=-2)
+    return patches.reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d_init(key, kh: int, kw: int, c_in: int, c_out: int,
+                bias: bool = True, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(kh * kw * c_in)
+    params = {"w": jax.random.uniform(key, (kh, kw, c_in, c_out), dtype,
+                                      -scale, scale)}
+    specs = {"w": (None, None, None, "mlp")}
+    if bias:
+        params["b"] = jnp.zeros((c_out,), dtype)
+        specs["b"] = ("mlp",)
+    return params, specs
+
+
+def conv2d_apply(params, x, stride: int = 1, padding: str = "VALID"):
+    w = params["w"].astype(x.dtype)
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def packed_conv2d_init(key, kh: int, kw: int, c_in: int, c_out: int,
+                       cfg: SparsityConfig, bias: bool = True, seed: int = 0,
+                       dtype=jnp.float32):
+    """CS conv packed along the filter dimension (paper Fig. 7)."""
+    params, specs = packed_linear_init(
+        key, kh * kw * c_in, c_out, cfg, bias=bias, seed=seed, dtype=dtype)
+    return params, specs
+
+
+def packed_conv2d_apply(params, x, cfg: SparsityConfig, kh: int, kw: int,
+                        stride: int = 1, padding: str = "VALID",
+                        x_is_sparse: bool = False):
+    cols = im2col(x, kh, kw, stride, padding)  # (B, OH, OW, kh*kw*C)
+    return packed_linear_apply(params, cols, cfg, x_is_sparse=x_is_sparse)
+
+
+def maxpool2d(x, size: int = 2, stride: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, stride, stride, 1),
+        "VALID")

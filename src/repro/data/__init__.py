@@ -1,0 +1,6 @@
+"""Data substrate: deterministic synthetic streams + host prefetch."""
+
+from .pipeline import Prefetcher
+from .synthetic import batch_for, embed_batch, gsc_batch, lm_batch
+
+__all__ = ["Prefetcher", "batch_for", "embed_batch", "gsc_batch", "lm_batch"]

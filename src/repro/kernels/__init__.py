@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the complementary-sparsity compute hot-spots.
+
+Kernels (each: <name>.py with pl.pallas_call + BlockSpec VMEM tiling,
+``ops.py`` jit'd/differentiable wrappers, ``ref.py`` pure-jnp oracles):
+
+* ``packed_matmul``     — matmul with in-VMEM CS decompression (MXU path).
+* ``grouped_cs_matmul`` — shared-route grouped matmul (N× fewer MXU FLOPs).
+* ``topk_gather``       — sparse-sparse contraction (K non-zeros only).
+* ``kwta_hist``         — histogram-threshold global k-WTA (paper Fig. 10).
+"""
+
+from .grouped_cs_matmul import (grouped_cs_matmul, interleave_out,
+                                permute_activations, slot_major_packed)
+from .kwta_hist import kwta_hist_pallas
+from .ops import (grouped_cs_matmul_op, kwta_hist_op, packed_matmul_op,
+                  topk_gather_op)
+from .packed_matmul import packed_matmul, to_partition_major
+from .topk_gather import topk_gather_matmul, topk_support
+
+__all__ = [
+    "grouped_cs_matmul", "interleave_out", "permute_activations",
+    "slot_major_packed", "kwta_hist_pallas", "grouped_cs_matmul_op",
+    "kwta_hist_op", "packed_matmul_op", "topk_gather_op", "packed_matmul",
+    "to_partition_major", "topk_gather_matmul", "topk_support",
+]

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: shared-route grouped CS matmul (the MXU-native
+realization of the paper's Multiply→Route→Sum with true N-fold FLOP
+reduction).
+
+With route sharing (DESIGN.md §3), all G output groups share one
+permutation per partition, so the runtime routing collapses to a single
+*static* activation permutation (applied outside, free at trace time) and
+the remaining compute is N independent (B, P) @ (P, G) matmuls — one per
+pack slot.  Total MXU FLOPs = 2·B·P·G·N = 2·B·D_in·D_out / N: the paper's
+N× MAC reduction executed at full MXU rate.
+
+Layouts:
+  xg     (N, B, P)  slot-major permuted activations
+  packed (N, P, G)
+  out    (N, B, G)  f32 (wrapper reinterleaves to (B, D_out))
+
+Grid: (s, nb, ng, nk), k innermost for accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]      # (bb, bp)
+    w = w_ref[0]      # (bp, bg)
+    o_ref[0] += jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_p", "block_g",
+                                             "interpret"))
+def grouped_cs_matmul(xg: jax.Array, packed: jax.Array,
+                      block_b: int = 128, block_p: int = 256,
+                      block_g: int = 256, interpret: bool = False) -> jax.Array:
+    """out[s] = xg[s] @ packed[s] for each pack slot s.
+
+    Args:
+      xg: (N, B, P) statically-permuted activations.
+      packed: (N, P, G).
+    Returns: (N, B, G) float32.
+    """
+    n, b, p = xg.shape
+    n2, p2, g = packed.shape
+    if (n2, p2) != (n, p):
+        raise ValueError(f"xg {xg.shape} vs packed {packed.shape}")
+    block_b = min(block_b, b)
+    block_p = min(block_p, p)
+    block_g = min(block_g, g)
+    if b % block_b or p % block_p or g % block_g:
+        raise ValueError("block sizes must divide (B, P, G)")
+    grid = (n, b // block_b, g // block_g, p // block_p)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_b, block_p),
+                         lambda s, ib, ig, ik: (s, ib, ik)),
+            pl.BlockSpec((1, block_p, block_g),
+                         lambda s, ib, ig, ik: (s, ik, ig)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, block_g),
+                               lambda s, ib, ig, ik: (s, ib, ig)),
+        out_shape=jax.ShapeDtypeStruct((n, b, g), jnp.float32),
+        interpret=interpret,
+    )(xg, packed)
+
+
+def permute_activations(x: jax.Array, route_shared) -> jax.Array:
+    """Apply the shared static route to activations: (B, D_in) -> (N, B, P).
+
+    ``route_shared`` is the (1, P, N) (or (P, N)) shared permutation — a
+    *static* numpy-known array, so this gather lowers to a compile-time
+    permutation (no runtime crossbar; DESIGN.md §2).
+    """
+    import numpy as np
+    r = np.asarray(route_shared)
+    r = r.reshape(r.shape[-2], r.shape[-1])          # (P, N)
+    p, n = r.shape
+    idx = (np.arange(p)[:, None] * n + r).astype(np.int32)  # (P, N)
+    xg = x[..., idx]                                  # (B, P, N)
+    return jnp.moveaxis(xg, -1, 0)                    # (N, B, P)
+
+
+def slot_major_packed(packed: jax.Array) -> jax.Array:
+    """core (G, P, N) -> kernel (N, P, G)."""
+    return packed.transpose(2, 1, 0)
+
+
+def interleave_out(y: jax.Array) -> jax.Array:
+    """kernel (N, B, G) -> (B, G*N) with outputs ordered [g*N + s]."""
+    n, b, g = y.shape
+    return y.transpose(1, 2, 0).reshape(b, g * n)

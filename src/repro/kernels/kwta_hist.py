@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: histogram-threshold global k-WTA (paper §3.3.3,
+Fig. 10).
+
+The FPGA builds M parallel histograms by scattering into count memories and
+then walks the merged histogram from the top bin down until the cumulative
+count reaches K.  A TPU VPU has no scatter, so we adapt the insight
+("threshold search over a value histogram is cheaper than a sort") with a
+**two-pass radix-16 histogram**: each pass counts 16 bins with vectorized
+compares (16 reductions over the row), giving the exact 256-bin threshold in
+2×16 row sweeps — O(32·D) work instead of O(D·log D) sorting, and fully
+vectorized over both the batch sublanes and the D lanes.
+
+Semantics match ``ref.ref_kwta_hist``: keep every element whose 256-level
+quantized value is >= the threshold bin (>= K survivors; exact K when the
+threshold bin holds a single element).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+_BINS = 256
+_RADIX = 16
+
+
+def _count_ge(q, lo_bin, width, base_mask):
+    """counts[b, t] = #(elements with q in [lo_bin + t*width, ...)) for
+    t in [0, 16), restricted to base_mask."""
+    counts = []
+    for t in range(_RADIX):
+        lo = lo_bin + t * width
+        sel = jnp.logical_and(base_mask, q >= lo) if width != 1 else \
+            jnp.logical_and(base_mask, q == lo)
+        counts.append(jnp.sum(sel.astype(jnp.int32), axis=-1))
+    return jnp.stack(counts, axis=-1)  # (B, 16)
+
+
+def _kernel(x_ref, o_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)            # (bb, D)
+    d = x.shape[-1]
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.where(hi > lo, (_BINS - 1) / (hi - lo), jnp.zeros_like(hi))
+    q = jnp.clip((x - lo) * scale, 0, _BINS - 1).astype(jnp.int32)
+
+    # Pass 1: coarse bins of width 16. tail[t] = #(q >= 16 t). The threshold
+    # coarse bin is the largest t with tail >= k.
+    ones = jnp.ones(q.shape, jnp.bool_)
+    tail_c = _count_ge(q, 0, _RADIX, ones)        # (bb, 16) tail counts
+    ok_c = (tail_c >= k).astype(jnp.int32)
+    tc = jnp.maximum(jnp.sum(ok_c, axis=-1) - 1, 0)   # (bb,)
+
+    # Pass 2: fine bins within coarse bin tc: tail_f[u] = #(q >= 16 tc + u).
+    base = 16 * tc[:, None]
+    tail_f = []
+    for u in range(_RADIX):
+        tail_f.append(jnp.sum((q >= base + u).astype(jnp.int32), axis=-1))
+    tail_f = jnp.stack(tail_f, axis=-1)           # (bb, 16)
+    ok_f = (tail_f >= k).astype(jnp.int32)
+    uf = jnp.maximum(jnp.sum(ok_f, axis=-1) - 1, 0)
+    tbin = 16 * tc + uf                           # (bb,) threshold bin
+
+    keep = q >= tbin[:, None]
+    o_ref[...] = jnp.where(keep, x_ref[...], jnp.zeros_like(x_ref))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "interpret"))
+def kwta_hist_pallas(x: jax.Array, k: int, block_b: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    """Histogram k-WTA over the last axis of (B, D)."""
+    b, d = x.shape
+    block_b = min(block_b, b)
+    if b % block_b:
+        raise ValueError(f"B={b} must divide block_b={block_b}")
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,126 @@
+"""Jit'd public wrappers around the Pallas kernels, with custom VJPs so the
+kernels are usable inside training graphs.
+
+Forward = Pallas kernel (or the jnp fallback when ``use_pallas=False`` /
+running on a non-TPU backend); backward = the sparse-cost jnp formulas from
+repro.core.functional (static gathers/scatters — same N-fold savings as the
+forward, see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import functional as F
+from .grouped_cs_matmul import grouped_cs_matmul
+from .kwta_hist import kwta_hist_pallas
+from .packed_matmul import packed_matmul, to_partition_major
+from .ref import ref_kwta_hist
+from .topk_gather import topk_gather_matmul, topk_support
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# packed matmul op (decompress-in-VMEM MXU path)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def packed_matmul_op(x, packed, route, interpret: bool = False):
+    """y = x @ decompress(packed, route); forward via the Pallas kernel."""
+    pr, rr = to_partition_major(packed, route)
+    y = packed_matmul(x, pr, rr, interpret=interpret or not _on_tpu())
+    return y.astype(x.dtype)
+
+
+def _pm_fwd(x, packed, route, interpret):
+    return packed_matmul_op(x, packed, route, interpret), (x, packed, route)
+
+
+def _pm_bwd(interpret, res, dy):
+    """Sparse-cost backward: gradients only on the packed support, routed
+    through the same static gather/scatter as the forward (DESIGN.md §3)."""
+    x, packed, route = res
+    g, p, n = packed.shape
+    r = g // route.shape[0]
+    idx = F.route_to_gather_idx(route, n)               # (Gr, P, N)
+    dyr = dy.reshape(*dy.shape[:-1], g // r, r, n)
+    xg = x[..., idx]
+    dpacked = jnp.einsum("...ups,...urs->urps", xg, dyr)
+    dpacked = dpacked.reshape(g, p, n).astype(packed.dtype)
+    contrib = jnp.einsum("urps,...urs->...ups",
+                         packed.reshape(g // r, r, p, n).astype(dy.dtype), dyr)
+    dx = jnp.zeros_like(x).at[..., idx].add(contrib.astype(x.dtype))
+    return dx, dpacked, None
+
+
+packed_matmul_op.defvjp(_pm_fwd, _pm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# grouped (shared-route) CS matmul op
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def grouped_cs_matmul_op(xg, packed_s, interpret: bool = False):
+    """out[s] = xg[s] @ packed_s[s]; (N, B, P) x (N, P, G) -> (N, B, G)."""
+    y = grouped_cs_matmul(xg, packed_s, interpret=interpret or not _on_tpu())
+    return y.astype(xg.dtype)
+
+
+def _gm_fwd(xg, packed_s, interpret):
+    return grouped_cs_matmul_op(xg, packed_s, interpret), (xg, packed_s)
+
+
+def _gm_bwd(interpret, res, dy):
+    xg, packed_s = res
+    dxg = jnp.einsum("nbg,npg->nbp", dy, packed_s.astype(dy.dtype))
+    dw = jnp.einsum("nbp,nbg->npg", xg.astype(dy.dtype), dy)
+    return dxg.astype(xg.dtype), dw.astype(packed_s.dtype)
+
+
+grouped_cs_matmul_op.defvjp(_gm_fwd, _gm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# sparse-sparse topk-gather op (serving path; custom_vjp for completeness)
+# ---------------------------------------------------------------------------
+
+def topk_gather_op(x, packed, route, k: int, interpret: bool = False):
+    """Sparse-sparse contraction via the Pallas kernel.
+
+    x: (B, D_in) k-sparse; packed (G, P, N); route (G/R, P, N).
+    """
+    g, p, n = packed.shape
+    vals, p_idx, s_off = topk_support(x, k, n)
+    pr, rr = to_partition_major(packed, route)
+    y = topk_gather_matmul(vals, p_idx, s_off, pr, rr,
+                           interpret=interpret or not _on_tpu())
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# histogram k-WTA op (straight-through gradient on the kept support)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def kwta_hist_op(x, k: int, interpret: bool = False):
+    return kwta_hist_pallas(x, k, interpret=interpret or not _on_tpu())
+
+
+def _kh_fwd(x, k, interpret):
+    y = kwta_hist_op(x, k, interpret)
+    return y, (y != 0)
+
+
+def _kh_bwd(k, interpret, mask, dy):
+    return (dy * mask.astype(dy.dtype),)
+
+
+kwta_hist_op.defvjp(_kh_fwd, _kh_bwd)

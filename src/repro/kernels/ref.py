@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function defines the exact semantics its kernel must
+reproduce; tests sweep shapes/dtypes and ``assert_allclose`` kernel
+(interpret=True) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ref_packed_matmul(x: jax.Array, packed: jax.Array,
+                      route: jax.Array) -> jax.Array:
+    """Decompress-and-matmul oracle.
+
+    x: (B, D_in); packed/route: (G, P, N). Returns (B, G*N) fp32.
+    """
+    g, p, n = packed.shape
+    idx = jnp.arange(p, dtype=jnp.int32)[None, :, None] * n + route.astype(jnp.int32)
+    w = jnp.zeros((p * n, g, n), jnp.float32)
+    gg = jnp.arange(g, dtype=jnp.int32)[:, None, None]
+    ss = jnp.arange(n, dtype=jnp.int32)[None, None, :]
+    w = w.at[idx, gg, ss].set(packed.astype(jnp.float32))
+    return x.astype(jnp.float32) @ w.reshape(p * n, g * n)
+
+
+def ref_grouped_cs_matmul(xg: jax.Array, packed: jax.Array) -> jax.Array:
+    """Shared-route grouped-matmul oracle.
+
+    xg: (N, B, P) — activations already statically permuted slot-major.
+    packed: (N, P, G). Returns (N, B, G) fp32: out[s] = xg[s] @ packed[s].
+    """
+    return jnp.einsum("nbp,npg->nbg", xg.astype(jnp.float32),
+                      packed.astype(jnp.float32))
+
+
+def ref_topk_gather(vals: jax.Array, p_idx: jax.Array, s_off: jax.Array,
+                    packed_p: jax.Array, route_p: jax.Array) -> jax.Array:
+    """Sparse-sparse gather oracle.
+
+    vals/p_idx/s_off: (B, K) — the K non-zero activations (value, partition
+    index, offset-within-partition).  packed_p/route_p: (P, G, N)
+    (partition-major layout).  Returns (B, G*N) fp32.
+    """
+    b, k = vals.shape
+    p, g, n = packed_p.shape
+    wrow = packed_p[p_idx]                      # (B, K, G, N)
+    rrow = route_p[p_idx]                       # (B, K, G, N)
+    hit = rrow == s_off[:, :, None, None].astype(rrow.dtype)
+    contrib = wrow.astype(jnp.float32) * hit.astype(jnp.float32)
+    y = jnp.einsum("bk,bkgs->bgs", vals.astype(jnp.float32), contrib)
+    return y.reshape(b, g * n)
+
+
+def ref_kwta_hist(x: jax.Array, k: int, bins: int = 256) -> jax.Array:
+    """Histogram-threshold k-WTA oracle (paper Fig. 10 semantics).
+
+    Keeps every element whose quantized bin >= the threshold bin, where the
+    threshold bin is the largest bin t such that #(elements with bin >= t)
+    >= k. Returns x masked (same dtype).
+    """
+    d = x.shape[-1]
+    if k >= d:
+        return x
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.where(hi > lo, (bins - 1) / (hi - lo), jnp.zeros_like(hi))
+    b = jnp.clip((x - lo) * scale, 0, bins - 1).astype(jnp.int32)
+    hist = jax.nn.one_hot(b, bins, dtype=jnp.int32).sum(axis=-2)
+    ccount = jnp.cumsum(hist[..., ::-1], axis=-1)[..., ::-1]
+    tbin = jnp.clip(jnp.sum((ccount >= k).astype(jnp.int32), axis=-1) - 1,
+                    0, bins - 1)
+    return x * (b >= tbin[..., None]).astype(x.dtype)
+
+
+def ref_topk_support(x: jax.Array, k: int):
+    """(vals, p_idx, s_off) of the K largest-|x| entries, for a given N."""
+    def for_n(n: int):
+        _, sel = lax.top_k(jnp.abs(x), k)
+        vals = jnp.take_along_axis(x, sel, axis=-1)
+        return vals, (sel // n).astype(jnp.int32), (sel % n).astype(jnp.int32)
+    return for_n

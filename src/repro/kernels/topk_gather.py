@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: sparse-sparse CS contraction (paper §3.2 / Fig. 8).
+
+Implements the five-step sparse-sparse pipeline's hot loop: for each of the
+K non-zero activations, fetch the corresponding packed weight row (the
+paper's 'K-ported weight memory' becomes K sequential VMEM dynamic slices —
+on TPU, parallelism comes from the (G, N) lane dimensions of each fetched
+row instead of from memory ports), mask by Kernel-ID match (route ==
+offset), scale by the activation value, and accumulate.
+
+FLOPs: 2·B·K·D_out — the multiplicative sparse-sparse saving
+(D_in/K from activations × N from weights on the memory side).
+
+Layouts:
+  vals   (B, K)       activation values (f32)
+  p_idx  (B, K) int32 partition index of each non-zero
+  s_off  (B, K) int32 offset-within-partition of each non-zero
+  packed (P, G, N)    partition-major packed weights
+  route  (P, G, N)    int8
+  out    (B, G*N)     f32
+
+Grid: (B, nG). Each step loops over K with a fori_loop of dynamic row
+loads — the weight tile (P, block_g, N) stays VMEM-resident across the K
+loop (weight reuse across the batch grid dim is handled by Pallas' revisit
+caching since the index map ignores b).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, pidx_ref, soff_ref, packed_ref, route_ref, o_ref,
+            *, k_nnz: int):
+    vals = vals_ref[0]            # (K,)
+    pidx = pidx_ref[0]            # (K,)
+    soff = soff_ref[0]            # (K,)
+    bg, n = packed_ref.shape[1], packed_ref.shape[2]
+
+    def body(j, acc):
+        p = pidx[j]
+        w = packed_ref[pl.ds(p, 1), :, :][0]
+        r = route_ref[pl.ds(p, 1), :, :][0]
+        hit = r == soff[j].astype(r.dtype)
+        return acc + jnp.where(hit, w.astype(jnp.float32), 0.0) * vals[j]
+
+    acc = lax.fori_loop(0, k_nnz, body, jnp.zeros((bg, n), jnp.float32))
+    o_ref[0] = acc.reshape(bg * n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+def topk_gather_matmul(vals: jax.Array, p_idx: jax.Array, s_off: jax.Array,
+                       packed_p: jax.Array, route_p: jax.Array,
+                       block_g: int = 0, interpret: bool = False) -> jax.Array:
+    """Sparse-sparse contraction of K non-zeros against packed weights.
+
+    Returns (B, G*N) float32. See module docstring for layouts.
+    """
+    b, k_nnz = vals.shape
+    p, g, n = packed_p.shape
+    block_g = block_g or g
+    if g % block_g:
+        raise ValueError(f"G={g} must divide block_g={block_g}")
+    return pl.pallas_call(
+        functools.partial(_kernel, k_nnz=k_nnz),
+        grid=(b, g // block_g),
+        in_specs=[
+            pl.BlockSpec((1, k_nnz), lambda ib, ig: (ib, 0)),
+            pl.BlockSpec((1, k_nnz), lambda ib, ig: (ib, 0)),
+            pl.BlockSpec((1, k_nnz), lambda ib, ig: (ib, 0)),
+            pl.BlockSpec((p, block_g, n), lambda ib, ig: (0, ig, 0)),
+            pl.BlockSpec((p, block_g, n), lambda ib, ig: (0, ig, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_g * n), lambda ib, ig: (ib, ig)),
+        out_shape=jax.ShapeDtypeStruct((b, g * n), jnp.float32),
+        interpret=interpret,
+    )(vals, p_idx.astype(jnp.int32), s_off.astype(jnp.int32),
+      packed_p, route_p)
+
+
+def topk_support(x: jax.Array, k: int, n: int):
+    """Select step (paper's k-WTA + index extraction): the K largest-|x|
+    positions as (vals, p_idx, s_off). Exact for any k-sparse x."""
+    _, sel = lax.top_k(jnp.abs(x), k)
+    vals = jnp.take_along_axis(x, sel, axis=-1)
+    return (vals.astype(jnp.float32), (sel // n).astype(jnp.int32),
+            (sel % n).astype(jnp.int32))

@@ -1,0 +1,2 @@
+"""Launch: production meshes, dry-run sweep, roofline, train/serve
+drivers."""

@@ -1,0 +1,81 @@
+"""HLO-text analysis: collective byte accounting.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled module text and sum operand sizes of every communication op.
+Shapes in HLO text look like ``bf16[16,256,4096]{2,1,0}``; the parsed byte
+count is the *per-device* payload of one execution of the op (HLO is the
+per-device SPMD program).
+
+Ops inside while-loop bodies execute once per trip; the roofline handles
+trip multiplication at a higher level (per-unit accounting compiles,
+launch/roofline.py) — here we also report, per collective kind, how many
+ops sit inside while bodies vs. at top level so that mis-accounting is
+visible.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\([^)]*\)|\S+?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes per collective kind (one execution each).
+
+    ``*-done`` ops are skipped (their ``*-start`` twin already counted)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    res = {f"{k}_bytes": v for k, v in out.items() if v}
+    res.update({f"{k}_count": float(c) for k, c in counts.items() if c})
+    res["total_bytes"] = sum(v for k, v in out.items())
+    return res
+
+
+def count_hlo_ops(hlo_text: str) -> Dict[str, int]:
+    """Coarse op census for perf archaeology: fusions, convolutions/dots,
+    while loops, (re)materialization hints."""
+    return {
+        "dot": len(re.findall(r"= .*? dot\(", hlo_text)),
+        "fusion": len(re.findall(r"fusion\(", hlo_text)),
+        "while": len(re.findall(r"= .*? while\(", hlo_text)),
+        "gather": len(re.findall(r"= .*? gather\(", hlo_text)),
+        "scatter": len(re.findall(r"= .*? scatter\(", hlo_text)),
+        "transpose": len(re.findall(r"= .*? transpose\(", hlo_text)),
+        "lines": hlo_text.count("\n"),
+    }

@@ -1,0 +1,50 @@
+"""Print roofline terms for specific dry-run result keys (hillclimb
+helper): PYTHONPATH=src python -m repro.launch.rooftool KEY [KEY...]"""
+
+import json
+import sys
+
+from repro.configs import get_config
+from repro.launch.roofline import cell_roofline
+
+
+def show(path, keys):
+    with open(path) as f:
+        results = json.load(f)
+    for key in keys:
+        rec = results.get(key)
+        if rec is None:
+            matches = [k for k in results if k.startswith(key)]
+            for m in matches:
+                show_one(m, results[m])
+            if not matches:
+                print(f"{key}: not found")
+            continue
+        show_one(key, rec)
+
+
+def show_one(key, rec):
+    if not rec.get("ok"):
+        print(f"{key}: FAILED {rec.get('error','')[:120]}")
+        return
+    arch = key.split("|")[0]
+    try:
+        cfg = get_config(arch)
+    except KeyError:
+        cfg = None
+    rl = cell_roofline(rec, cfg)
+    if rl is None:
+        print(f"{key}: no accounting data")
+        return
+    print(f"{key}:")
+    print(f"  compute={rl['compute_s']*1e3:9.2f}ms  "
+          f"memory={rl['memory_s']*1e3:9.2f}ms  "
+          f"collective={rl['collective_s']*1e3:9.2f}ms  "
+          f"-> {rl['bottleneck']}-bound")
+    print(f"  mem/dev={rec['full']['memory'].get('peak_bytes_est',0)/1e9:.2f}GB  "
+          f"useful={rl.get('useful_fraction',0):.3f}  "
+          f"MFU@bound={rl.get('mfu_at_bound',0)*100:.2f}%")
+
+
+if __name__ == "__main__":
+    show("experiments/dryrun_results.json", sys.argv[1:])

@@ -1,0 +1,101 @@
+"""Batched serving driver: prefill + decode with KV caches.
+
+Serves a (reduced or full) LM with continuous batched greedy decoding:
+  1. prefill the prompt batch (full forward, cache write via teacher
+     forcing of the prompt tokens),
+  2. decode tokens one position at a time with ``serve_step``.
+
+The prefill here reuses the decode step position-by-position for cache
+construction on CPU-sized models (exact, simple); the 32k-prefill cell in
+the dry-run lowers the fused full-sequence forward instead.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as T
+from repro.sharding import make_rules, param_sharding, use_rules
+
+
+class Server:
+    def __init__(self, cfg, mesh, max_seq: int):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.max_seq = max_seq
+        self.rules = make_rules(mesh, "decode")
+        with use_rules(self.rules):
+            params, specs = T.init_model(jax.random.PRNGKey(0), cfg)
+            self.p_shard = param_sharding(specs, params, self.rules)
+            self.params = jax.device_put(params, self.p_shard)
+        self._step = jax.jit(
+            lambda p, c, b, pos: T.serve_step(p, c, b, pos, cfg),
+            donate_argnums=(1,), static_argnums=())
+
+    def new_cache(self, batch: int):
+        with use_rules(self.rules):
+            cache, specs = T.init_cache(self.cfg, batch, self.max_seq)
+            shard = param_sharding(specs, cache, self.rules)
+            return jax.device_put(cache, shard)
+
+    def generate(self, prompts: np.ndarray, gen_len: int):
+        """prompts: (B, P) int32. Greedy decode ``gen_len`` tokens."""
+        b, p_len = prompts.shape
+        cache = self.new_cache(b)
+        with use_rules(self.rules):
+            # prefill by stepping through prompt positions (cache build)
+            tok = prompts[:, :1].astype(np.int32)
+            logits = None
+            for pos in range(p_len):
+                batch = {"tokens": jnp.asarray(prompts[:, pos:pos + 1])}
+                logits, cache = self._step(self.params, cache, batch, pos)
+            out = []
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            for i in range(gen_len):
+                out.append(np.asarray(cur))
+                logits, cache = self._step(self.params, cache,
+                                           {"tokens": cur}, p_len + i)
+                cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return np.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh(dims, ("data", "model"))
+    server = Server(cfg, mesh, max_seq=args.prompt_len + args.gen + 1)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.time()
+    out = server.generate(prompts, args.gen)
+    dt = time.time() - t0
+    total = args.batch * args.gen
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s batched); sample: {out[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Step functions + abstract initialization + input specs for every
+(architecture x input-shape) cell.
+
+Everything here works on ShapeDtypeStructs (no allocation) so the 235B
+configs can be lowered/compiled on a CPU host with 512 placeholder devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import transformer as T
+from repro.models.common import cross_entropy, dtype_of
+from repro.optim import AdamWConfig, apply_updates, init_state, warmup_cosine
+from repro.sharding import Rules, make_rules, param_sharding, use_rules
+
+
+from repro.sharding.context import is_spec as _spec_leaf  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Abstract init
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct pytree, logical specs) without allocating.
+
+    ``init_model`` is traced under eval_shape (so even the 235B table is
+    just shapes); the specs — plain python data — are captured on the
+    side."""
+    pd = dtype_of(cfg.param_dtype)
+    captured = {}
+
+    def init():
+        p, s = T.init_model(jax.random.PRNGKey(0), cfg)
+        captured["specs"] = s
+        return jax.tree.map(
+            lambda x: x.astype(pd)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, p)
+
+    shapes = jax.eval_shape(init)
+    return shapes, captured["specs"]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    captured = {}
+
+    def init():
+        c, s = T.init_cache(cfg, batch, max_seq)
+        captured["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(init)
+    return shapes, captured["specs"]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (the assignment's input_specs() contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    ct = dtype_of(cfg.compute_dtype)
+    if shape.kind == "decode":
+        if cfg.frontend == "embed":
+            return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), ct)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.frontend == "embed":
+        batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), ct),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    elif cfg.frontend == "vision_prefix":
+        s_txt = s - cfg.n_prefix
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s_txt), jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct((b, cfg.n_prefix,
+                                                  cfg.d_model), ct),
+            "labels": jax.ShapeDtypeStruct((b, s_txt), jnp.int32),
+        }
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        batch.pop("labels", None)
+    return batch
+
+
+def batch_logical_specs(batch) -> Dict[str, Tuple]:
+    out = {}
+    for k, v in batch.items():
+        out[k] = ("batch",) + (None,) * (v.ndim - 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 moment specs
+# ---------------------------------------------------------------------------
+
+def zero1_specs(param_specs, param_shapes, rules: Rules):
+    """Extend each moment leaf's spec with the DP axes on the first
+    shardable (currently-replicated, divisible) dimension — optimizer-state
+    sharding (ZeRO-1)."""
+    from repro.sharding.axes import dp_axes
+    dp = dp_axes(rules.mesh)
+    if not dp:
+        return param_specs
+    dp_size = 1
+    for a in dp:
+        dp_size *= rules.mesh.shape[a]
+
+    def extend(spec, shape_leaf):
+        shape = shape_leaf.shape
+        if len(spec) != len(shape):
+            return spec
+        spec = list(spec)
+        for i, (ax, dim) in enumerate(zip(spec, shape)):
+            # eligible if the dim currently resolves to no mesh axes
+            resolved = rules.resolve(ax, dim) if isinstance(ax, str) else ax
+            if resolved in (None, ()) and dim % dp_size == 0 and dim > 0:
+                spec[i] = dp
+                break
+        return tuple(spec)
+
+    return jax.tree.map(extend, param_specs, param_shapes,
+                        is_leaf=lambda s: _spec_leaf(s))
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    acfg = AdamWConfig(lr=tcfg.lr, b1=tcfg.b1, b2=tcfg.b2,
+                       weight_decay=tcfg.weight_decay,
+                       grad_clip=tcfg.grad_clip,
+                       moment_dtype=dtype_of(tcfg.moment_dtype))
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return T.loss_fn(p, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lf, has_aux=True, allow_int=True)(params)
+        lr_scale = warmup_cosine(opt_state["step"], tcfg.warmup_steps,
+                                 tcfg.total_steps)
+        params, opt_state, om = apply_updates(params, grads, opt_state, acfg,
+                                              lr_scale)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step, acfg
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch, pos):
+        return T.serve_step(params, cache, batch, pos, cfg)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, batch, cfg)
+        return logits[:, -1]  # next-token logits
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Accounting steps (roofline FLOP/collective sources; scan bodies are
+# counted once by XLA cost analysis, so we compile one unit explicitly)
+# ---------------------------------------------------------------------------
+
+def make_unit_train_step(cfg: ModelConfig):
+    """fwd+bwd through ONE superblock (the scan body) — cost_analysis of
+    this, x n_units, is the layer-stack term of the roofline."""
+    unit_fn = T.unit_step_fn(cfg)
+
+    def step(unit_params, shared, x, positions):
+        def lf(up, x):
+            y, aux = unit_fn(up, shared, x, positions)
+            return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+        g, gx = jax.grad(lf, argnums=(0, 1), allow_int=True)(unit_params, x)
+        return g, gx
+
+    return step
+
+
+def make_unit_fwd_step(cfg: ModelConfig):
+    unit_fn = T.unit_step_fn(cfg)
+
+    def step(unit_params, shared, x, positions):
+        y, _ = unit_fn(unit_params, shared, x, positions)
+        return y
+
+    return step
+
+
+def make_head_train_step(cfg: ModelConfig):
+    """Embed + LM head + loss, fwd+bwd (the vocab term of the roofline)."""
+    ct = dtype_of(cfg.compute_dtype)
+
+    def step(table, tokens, labels, x):
+        def lf(table, x):
+            emb = jnp.take(table.astype(ct), tokens, axis=0)
+            logits = x @ table.astype(ct).T
+            return cross_entropy(logits[:, :-1], labels[:, 1:]) \
+                + 0.0 * jnp.sum(emb.astype(jnp.float32) ** 2)
+        return jax.grad(lf, argnums=(0, 1))(table, x)
+
+    return step
+
+
+def make_opt_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """The optimizer update alone (elementwise + ZeRO resharding
+    collectives)."""
+    acfg = AdamWConfig(moment_dtype=dtype_of(tcfg.moment_dtype))
+
+    def step(params, grads, opt_state):
+        p, s, m = apply_updates(params, grads, opt_state, acfg, 1.0)
+        return p, s
+
+    return step

@@ -1,0 +1,212 @@
+"""End-to-end training driver with production fault tolerance.
+
+Features (each one exercised by tests/test_train_loop.py):
+  * auto-resume from the latest valid checkpoint (atomic + checksummed),
+  * periodic async checkpointing + pruning,
+  * SIGTERM/SIGINT preemption handler -> final checkpoint -> clean exit,
+  * StepMonitor straggler detection -> elastic checkpoint-and-reshard hook,
+  * LossGuard NaN/spike detection -> rollback to last checkpoint,
+  * deterministic stateless data (resume reproduces the exact batch
+    sequence),
+  * optional int8 error-feedback gradient compression across the pod axis
+    (pure-DP pod layouts),
+  * works on any mesh: (1,1) on this CPU container up to (2,16,16).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 100 --batch 8 --seq 128 --mesh 1x1 [--resume]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import SHAPES, TrainConfig, get_config
+from repro.configs.base import ShapeConfig
+from repro.data import Prefetcher, batch_for
+from repro.launch import steps as St
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as T
+from repro.optim import init_state
+from repro.runtime import LossGuard, StepMonitor
+from repro.sharding import make_rules, param_sharding, use_rules
+
+
+class Trainer:
+    """Owns params/opt-state/mesh and the fault-tolerant step loop."""
+
+    def __init__(self, cfg, tcfg: TrainConfig, mesh, shape: ShapeConfig,
+                 reduced: bool = False):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.shape = shape
+        self.mesh = mesh
+        self.rules = make_rules(mesh, "train")
+        self.monitor = StepMonitor()
+        self.guard = LossGuard()
+        self.step = 0
+        self._preempted = False
+        self._build()
+
+    # -- construction -----------------------------------------------------
+
+    def _build(self):
+        cfg, tcfg = self.cfg, self.tcfg
+        with use_rules(self.rules):
+            params, specs = T.init_model(jax.random.PRNGKey(tcfg.seed), cfg)
+            self.specs = specs
+            self.p_shard = param_sharding(specs, params, self.rules)
+            params = jax.device_put(params, self.p_shard)
+            train_step, acfg = St.make_train_step(cfg, tcfg)
+            self.acfg = acfg
+            opt = init_state(params, acfg)
+            zspecs = (St.zero1_specs(specs, params, self.rules)
+                      if tcfg.zero1 else specs)
+            self.o_shard = {
+                "mu": param_sharding(zspecs, opt["mu"], self.rules),
+                "nu": param_sharding(zspecs, opt["nu"], self.rules),
+                "step": jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec()),
+            }
+            opt = jax.device_put(opt, self.o_shard)
+            self.params, self.opt = params, opt
+            self.b_specs = None
+            self._jit = jax.jit(train_step, donate_argnums=(0, 1))
+
+    def batch_sharding(self, batch):
+        return {k: self.rules.sharding_for(
+            ("batch",) + (None,) * (np.asarray(v).ndim - 1),
+            np.asarray(v).shape) for k, v in batch.items()}
+
+    # -- checkpoint/restore ------------------------------------------------
+
+    def state_tree(self):
+        return {"params": self.params, "opt": self.opt}
+
+    def save(self, async_: bool = True):
+        tree = self.state_tree()
+        extra = {"step": self.step, "arch": self.cfg.name}
+        if async_:
+            return ckpt.save_async(self.tcfg.ckpt_dir, self.step, tree, extra)
+        return ckpt.save(self.tcfg.ckpt_dir, self.step, tree, extra)
+
+    def try_resume(self) -> bool:
+        like = self.state_tree()
+        shardings = {"params": self.p_shard, "opt": self.o_shard}
+        step, tree, extra = ckpt.restore_latest(self.tcfg.ckpt_dir, like,
+                                                shardings)
+        if step is None:
+            return False
+        self.params, self.opt = tree["params"], tree["opt"]
+        self.step = extra.get("step", step)
+        return True
+
+    def rollback(self) -> bool:
+        """Loss blew up / NaN: restore the last checkpoint and skip
+        forward past the bad step (fresh data, same params)."""
+        ok = self.try_resume()
+        if ok:
+            self.step += 1  # skip the batch that produced the blow-up
+        return ok
+
+    # -- the loop ----------------------------------------------------------
+
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def run(self, total_steps: int, batch_fn, log=print):
+        tcfg = self.tcfg
+        pre = Prefetcher(batch_fn, self.step, depth=2)
+        try:
+            while self.step < total_steps and not self._preempted:
+                _, batch = pre.get(expected_step=self.step)
+                with use_rules(self.rules):
+                    sh = self.batch_sharding(batch)
+                    batch = {k: jax.device_put(v, sh[k])
+                             for k, v in batch.items()}
+                    self.monitor.start()
+                    self.params, self.opt, metrics = self._jit(
+                        self.params, self.opt, batch)
+                    loss = float(metrics["loss"])
+                    ev = self.monitor.stop(self.step)
+                if not self.guard.check(loss):
+                    log(f"[guard] step {self.step}: loss {loss} unhealthy; "
+                        f"rolling back")
+                    if not self.rollback():
+                        raise RuntimeError(
+                            f"loss diverged at step {self.step} with no "
+                            f"checkpoint to roll back to")
+                    continue
+                if self.monitor.should_reshard:
+                    log(f"[monitor] sustained stragglers at step "
+                        f"{self.step}; checkpointing for elastic reshard")
+                    self.save(async_=False)
+                if self.step % tcfg.log_every == 0:
+                    log(f"step {self.step:6d} loss {loss:.4f} "
+                        f"({ev.duration*1e3:.0f} ms)")
+                self.step += 1
+                if self.step % tcfg.checkpoint_every == 0:
+                    self.save()
+                    ckpt.prune(tcfg.ckpt_dir, keep=3)
+            if self._preempted:
+                log(f"[preempt] signal received; checkpointing at step "
+                    f"{self.step}")
+            if ckpt.latest_step(tcfg.ckpt_dir) != self.step:
+                self.save(async_=False)
+        finally:
+            pre.close()
+        return self.step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    mesh = make_mesh(dims, axes)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
+                       ckpt_dir=args.ckpt_dir,
+                       checkpoint_every=max(10, args.steps // 5))
+    trainer = Trainer(cfg, tcfg, mesh, shape)
+    trainer.install_preemption_handler()
+    if args.resume and trainer.try_resume():
+        print(f"resumed from step {trainer.step}")
+
+    def batch_fn(step):
+        return batch_for(cfg, shape, step, seed=tcfg.seed)
+
+    t0 = time.time()
+    final = trainer.run(args.steps, batch_fn)
+    print(f"finished at step {final} in {time.time()-t0:.1f}s; "
+          f"monitor: {trainer.monitor.summary()}")
+
+
+if __name__ == "__main__":
+    main()

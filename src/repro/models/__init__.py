@@ -1,0 +1,10 @@
+"""Model zoo: decoder LMs (dense/MoE/SSM/hybrid/audio/VLM backbones) and the
+paper's GSC CNN, assembled from config-driven blocks."""
+
+from . import attention, ffn, gsc_cnn, moe, ssm, transformer
+from .transformer import (forward, init_cache, init_model, loss_fn,
+                          param_count, serve_step)
+
+__all__ = ["attention", "ffn", "gsc_cnn", "moe", "ssm", "transformer",
+           "forward", "init_cache", "init_model", "loss_fn", "param_count",
+           "serve_step"]

@@ -1,0 +1,411 @@
+"""Attention blocks: GQA with RoPE (+ blockwise 'flash' softmax for long
+prefill), MLA (DeepSeek-V2 latent compression), and KV-cache decode steps.
+
+Conventions:
+  x          (B, S, D)
+  kv cache   {"k": (B, Smax, Hkv, Dh), "v": ..., } + position carried by the
+             caller; cache seq axis uses logical axis "kvseq" (SP, §6).
+  Projections may be complementary-sparse (cfg.proj_sparsity) — the paper's
+  §6.4 'apply Complementary Sparsity to Transformers'.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.api import SparsityConfig
+from repro.core.layers import (linear_apply, linear_init, packed_linear_apply,
+                               packed_linear_init)
+from repro.sharding.context import constrain
+from .common import apply_rope, normal_init
+
+
+def _proj_init(key, d_in, d_out, sp: SparsityConfig, out_axis, name_seed):
+    """Dense or CS-packed projection depending on cfg.proj_sparsity."""
+    if sp.weight_sparse and d_in % sp.n == 0 and d_out % sp.n == 0:
+        return packed_linear_init(key, d_in, d_out, sp, bias=False,
+                                  seed=name_seed, out_axis=out_axis)
+    p, s = linear_init(key, d_in, d_out, bias=False, out_axis=out_axis)
+    return p, s
+
+
+def _proj_apply(params, x, sp: SparsityConfig):
+    if "packed" in params:
+        return packed_linear_apply(params, x, sp)
+    return linear_apply(params, x)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg):
+    h, hkv, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    hp = cfg.padded_heads
+    ks = jax.random.split(key, 4)
+    sp = cfg.proj_sparsity
+    q, qs = _proj_init(ks[0], d, h * dh, sp, "heads", 11)
+    k, ks_ = _proj_init(ks[1], d, hkv * dh, sp, "kv", 12)
+    v, vs = _proj_init(ks[2], d, hkv * dh, sp, "kv", 13)
+    # o-proj rows for padded dummy heads exist but only ever see zeros
+    o, os_ = _proj_init(ks[3], hp * dh, d, sp, "embed", 14)
+    return ({"q": q, "k": k, "v": v, "o": o},
+            {"q": qs, "k": ks_, "v": vs, "o": os_})
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=-2)
+
+
+def _pad_heads(x, h_pad):
+    """Pad the head axis (-2) with zero heads up to h_pad (TP
+    divisibility; DESIGN.md §6). GQA grouping is preserved because padding
+    happens *after* the kv repeat."""
+    h = x.shape[-2]
+    if h_pad <= h:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[-2] = (0, h_pad - h)
+    return jnp.pad(x, pad)
+
+
+def _mask_dummy_heads(out, cfg):
+    """Zero the padded heads' outputs so the o-projection sees the exact
+    n_heads function (dummy heads attend uniformly — must not leak)."""
+    h, hp = cfg.n_heads, cfg.padded_heads
+    if hp == h:
+        return out
+    mask = (jnp.arange(hp) < h).astype(out.dtype)
+    return out * mask[..., :, None]
+
+
+def _causal_attn(q, k, v, scale):
+    """Materialized causal attention (short seq). q/k/v: (B, S, H, Dh)."""
+    s_q, s_k = q.shape[1], k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = np.tril(np.ones((s_q, s_k), bool), k=s_k - s_q)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _flash_attn(q, k, v, scale, block: int, unroll: bool = False):
+    """Blockwise (online-softmax) causal attention: O(S·block) memory.
+
+    Scans over KV chunks carrying (acc, row_max, row_sum). Used whenever
+    S_kv exceeds `block` (32k prefill would otherwise materialize an
+    S², per-head score tensor).
+    """
+    b, s_q, h, dh = q.shape
+    dv = v.shape[-1]  # may differ from dh (MLA: rope-extended queries)
+    s_k = k.shape[1]
+    nblk = s_k // block
+    q32 = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(s_q)
+
+    @jax.checkpoint  # flash-style backward: recompute scores per block
+    def body(carry, blk):
+        acc, m, l = carry
+        kb, vb, kb_start = blk
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q32, kb.astype(jnp.float32))
+        k_pos = kb_start + jnp.arange(block)
+        mask = q_pos[:, None] + (s_k - s_q) >= k_pos[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    kb = k.reshape(b, nblk, block, h, dh).swapaxes(0, 1)
+    vb = v.reshape(b, nblk, block, h, dv).swapaxes(0, 1)
+    starts = jnp.arange(nblk) * block
+    init = (jnp.zeros((b, h, s_q, dv), jnp.float32),
+            jnp.full((b, h, s_q), -jnp.inf),
+            jnp.zeros((b, h, s_q), jnp.float32))
+    (acc, m, l), _ = lax.scan(body, init, (kb, vb, starts),
+                           unroll=nblk if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B, S, H, Dh)
+
+
+def gqa_apply(params, x, cfg, positions):
+    """Training/prefill forward (full causal self-attention)."""
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hp = cfg.padded_heads
+    sp = cfg.proj_sparsity
+    q = _split_heads(_proj_apply(params["q"], x, sp), h, dh)
+    k = _split_heads(_proj_apply(params["k"], x, sp), hkv, dh)
+    v = _split_heads(_proj_apply(params["v"], x, sp), hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    q, k, v = (_pad_heads(t, hp) for t in (q, k, v))
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "heads", None)
+    v = constrain(v, "batch", "seq", "heads", None)
+    scale = 1.0 / np.sqrt(dh)
+    if x.shape[1] > cfg.flash_block:
+        out = _flash_attn(q, k, v, scale, cfg.flash_block,
+                          unroll=cfg.unroll_inner)
+    else:
+        out = _causal_attn(q, k, v, scale)
+    out = constrain(out, "batch", "seq", "heads", None)
+    out = _mask_dummy_heads(out, cfg)
+    return _proj_apply(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
+
+
+def gqa_cache_init(cfg, batch: int, max_seq: int, dtype):
+    """KV cache holding the *true* kv heads (head padding happens at use).
+
+    With ``cfg.kv_cache_dtype == 'int8'`` (beyond-paper, §Perf): values are
+    stored quantized with one scale per (batch, position, head) row —
+    halving the decode-dominating cache bytes; dequantization is fused into
+    the attention reads."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        z8 = jnp.zeros((batch, max_seq, hkv, dh), jnp.int8)
+        zs = jnp.zeros((batch, max_seq, hkv), jnp.float32)
+        return {"k": z8, "v": z8, "k_scale": zs, "v_scale": zs}
+    return {"k": jnp.zeros((batch, max_seq, hkv, dh), dtype),
+            "v": jnp.zeros((batch, max_seq, hkv, dh), dtype)}
+
+
+def _quant_rows(x):
+    """Per-(..., head)-row symmetric int8 quantization over head_dim."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _cache_write(cache, new, pos, mode: str = None):
+    """Write one position into a (B, S, ...) cache.
+
+    ``dynamic_update_slice`` at a traced index on the sequence axis defeats
+    GSPMD when the cache is sequence-sharded (SP): it all-gathers the whole
+    cache (measured: 34 GB/step collectives on yi-6b decode_32k).
+
+    modes (cfg.cache_write):
+      masked — one-hot elementwise write: partitions on every axis, costs
+               one full cache read+write per step (the safe default).
+      owner  — shard_map row-owner write (§Perf hillclimb A rung 3): only
+               the shard owning position ``pos`` runs a local
+               dynamic_update_slice; other shards pass through untouched.
+    """
+    mode = mode or "masked"
+    if mode == "owner":
+        owner = _owner_write(cache, new, pos)
+        if owner is not None:
+            return owner
+    s = cache.shape[1]
+    hot = (jnp.arange(s) == pos)
+    shape = [1, s] + [1] * (cache.ndim - 2)
+    hot = hot.reshape(shape)
+    return jnp.where(hot, new.astype(cache.dtype), cache)
+
+
+
+def _owner_write(cache, new, pos):
+    """shard_map write into the sequence-sharded cache; returns None when
+    no rules/sharding apply (caller falls back to the masked write)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.context import get_rules
+    rules = get_rules()
+    if rules is None:
+        return None
+    axes = rules.resolve("kvseq", cache.shape[1])
+    if axes is None:
+        return None
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    b_axes = rules.resolve("batch", cache.shape[0])
+    mesh = rules.mesh
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    shard_len = cache.shape[1] // n_shards
+    cache_spec = P(b_axes, axes, *([None] * (cache.ndim - 2)))
+    new_spec = P(b_axes, None, *([None] * (cache.ndim - 2)))
+
+    def local(c, n, p):
+        # linearized shard index over the (possibly multi-axis) seq axes
+        idx = jnp.zeros((), jnp.int32)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        start = idx * shard_len
+        lp = p - start
+        in_range = jnp.logical_and(lp >= 0, lp < shard_len)
+
+        def write(c):
+            lpc = jnp.clip(lp, 0, shard_len - 1)
+            starts = (0, lpc) + (0,) * (c.ndim - 2)
+            return lax.dynamic_update_slice(c, n.astype(c.dtype), starts)
+
+        return lax.cond(in_range, write, lambda c: c, c)
+
+    return jax.shard_map(
+        local, mesh=mesh, in_specs=(cache_spec, new_spec, P()),
+        out_specs=cache_spec, check_vma=False,
+    )(cache, new, pos if hasattr(pos, "dtype") else jnp.int32(pos))
+
+
+def gqa_cache_specs(cfg=None):
+    specs = {"k": ("batch", "kvseq", "kv", None),
+             "v": ("batch", "kvseq", "kv", None)}
+    if cfg is not None and getattr(cfg, "kv_cache_dtype", "") == "int8":
+        specs["k_scale"] = ("batch", "kvseq", "kv")
+        specs["v_scale"] = ("batch", "kvseq", "kv")
+    return specs
+
+
+def gqa_decode(params, x, cfg, cache, pos):
+    """One-token decode step. x: (B, 1, D); pos: scalar current position.
+
+    The new K/V row is scattered into the cache at ``pos``; attention reads
+    the full cache with a validity mask (positions > pos are masked).  With
+    the cache sequence axis sharded ("kvseq" -> model/SP), GSPMD turns the
+    softmax reductions into cross-shard collectives.
+    """
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sp = cfg.proj_sparsity
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = _split_heads(_proj_apply(params["q"], x, sp), h, dh)
+    k = _split_heads(_proj_apply(params["k"], x, sp), hkv, dh)
+    v = _split_heads(_proj_apply(params["v"], x, sp), hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = {}
+    if "k_scale" in cache:  # int8-quantized cache (beyond-paper)
+        kq, ks = _quant_rows(k)
+        vq, vs = _quant_rows(v)
+        new_cache["k"] = _cache_write(cache["k"], kq, pos, cfg.cache_write)
+        new_cache["v"] = _cache_write(cache["v"], vq, pos, cfg.cache_write)
+        new_cache["k_scale"] = _cache_write(cache["k_scale"], ks, pos, cfg.cache_write)
+        new_cache["v_scale"] = _cache_write(cache["v_scale"], vs, pos, cfg.cache_write)
+        k_cache = (new_cache["k"].astype(x.dtype)
+                   * new_cache["k_scale"][..., None].astype(x.dtype))
+        v_cache = (new_cache["v"].astype(x.dtype)
+                   * new_cache["v_scale"][..., None].astype(x.dtype))
+    else:
+        new_cache["k"] = k_cache = _cache_write(cache["k"], k, pos, cfg.cache_write)
+        new_cache["v"] = v_cache = _cache_write(cache["v"], v, pos, cfg.cache_write)
+    hp = cfg.padded_heads
+    q = _pad_heads(q, hp)
+    kf = _pad_heads(_repeat_kv(k_cache, h // hkv), hp)
+    vf = _pad_heads(_repeat_kv(v_cache, h // hkv), hp)
+    scale = 1.0 / np.sqrt(dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
+    valid = jnp.arange(kf.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    out = _mask_dummy_heads(out, cfg)
+    y = _proj_apply(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent KV compression
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    params = {
+        "q": normal_init(ks[0], (d, h * (dh + dr)), 0.02),
+        "dkv": normal_init(ks[1], (d, r), 0.02),
+        "kpe": normal_init(ks[2], (d, dr), 0.02),
+        "uk": normal_init(ks[3], (r, h * dh), 0.02),
+        "uv": normal_init(ks[4], (r, h * dh), 0.02),
+        "o": normal_init(ks[5], (h * dh, d), 0.02),
+    }
+    specs = {"q": (None, "heads"), "dkv": (None, None), "kpe": (None, None),
+             "uk": (None, "heads"), "uv": (None, "heads"),
+             "o": ("heads", None)}
+    return params, specs
+
+
+def _mla_qkv(params, x, cfg, positions):
+    h, dh, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    ct = x.dtype
+    q = (x @ params["q"].astype(ct)).reshape(*x.shape[:-1], h, dh + dr)
+    q_nope, q_pe = q[..., :dh], q[..., dh:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    c_kv = x @ params["dkv"].astype(ct)                      # (B, S, r)
+    k_pe = apply_rope(x @ params["kpe"].astype(ct), positions,
+                      cfg.rope_theta)                        # (B, S, dr)
+    return q_nope, q_pe, c_kv, k_pe
+
+
+def _mla_expand(params, c_kv, cfg, ct):
+    h, dh = cfg.n_heads, cfg.head_dim
+    k_nope = (c_kv @ params["uk"].astype(ct)).reshape(*c_kv.shape[:-1], h, dh)
+    v = (c_kv @ params["uv"].astype(ct)).reshape(*c_kv.shape[:-1], h, dh)
+    return k_nope, v
+
+
+def mla_apply(params, x, cfg, positions):
+    h, dh, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
+    k_nope, v = _mla_expand(params, c_kv, cfg, x.dtype)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_pe[..., None, :],
+                                          (*k_pe.shape[:-1], h, dr))], axis=-1)
+    scale = 1.0 / np.sqrt(dh + dr)
+    if x.shape[1] > cfg.flash_block:
+        out = _flash_attn(q, k, v, scale, cfg.flash_block,
+                          unroll=cfg.unroll_inner)
+    else:
+        out = _causal_attn(q, k, v, scale)
+    return out.reshape(*x.shape[:-1], h * dh) @ params["o"].astype(x.dtype)
+
+
+def mla_cache_init(cfg, batch: int, max_seq: int, dtype):
+    """MLA caches the compressed latent + rope key only: (r + dr) per token
+    — the paper-adjacent memory win that makes MLA decode cheap."""
+    return {"ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype)}
+
+
+def mla_cache_specs():
+    return {"ckv": ("batch", "kvseq", None), "kpe": ("batch", "kvseq", None)}
+
+
+def mla_decode(params, x, cfg, cache, pos):
+    h, dh, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
+    ckv_c = _cache_write(cache["ckv"], c_kv, pos, cfg.cache_write)
+    kpe_c = _cache_write(cache["kpe"], k_pe, pos, cfg.cache_write)
+    k_nope, v = _mla_expand(params, ckv_c, cfg, x.dtype)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(kpe_c[..., None, :],
+                                          (*kpe_c.shape[:-1], h, dr))],
+                        axis=-1)
+    scale = 1.0 / np.sqrt(dh + dr)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(k.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    y = out.reshape(*x.shape[:-1], h * dh) @ params["o"].astype(x.dtype)
+    return y, {"ckv": ckv_c, "kpe": kpe_c}

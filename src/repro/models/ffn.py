@@ -1,0 +1,66 @@
+"""Feed-forward blocks: dense SwiGLU/GELU and the complementary-sparse
+sparse-sparse FFN (the paper's technique applied to Transformer linear
+layers, their §6.4 future direction).
+
+Sparse-sparse FFN dataflow (mirrors paper Fig. 8a at layer granularity):
+
+    h   = act(W_gate x) * (W_up x)        (packed CS weights: sparse-dense)
+    h_s = k-WTA(h)                        (Select)
+    y   = W_down h_s                      (packed CS; with the k-sparse
+                                           input this is the sparse-sparse
+                                           Multiply-Route-Sum — dispatched
+                                           to the topk path when B·K < d_ff)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import SparsityConfig
+from repro.core.layers import (apply_kwta, linear_apply, linear_init,
+                               packed_linear_apply, packed_linear_init)
+from repro.sharding.context import constrain
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def ffn_init(key, d_model: int, d_ff: int, cfg_sp: SparsityConfig,
+             act: str = "silu"):
+    """SwiGLU (silu) or plain (gelu/relu) FFN; packed when cfg_sp.n > 1."""
+    ks = jax.random.split(key, 3)
+    gated = act == "silu"
+    params, specs = {}, {}
+
+    def mk(key, d_in, d_out, out_axis, seed):
+        if cfg_sp.weight_sparse and d_in % cfg_sp.n == 0 and d_out % cfg_sp.n == 0:
+            return packed_linear_init(key, d_in, d_out, cfg_sp, bias=False,
+                                      seed=seed, out_axis=out_axis)
+        return linear_init(key, d_in, d_out, bias=False, out_axis=out_axis)
+
+    params["up"], specs["up"] = mk(ks[0], d_model, d_ff, "mlp", 21)
+    if gated:
+        params["gate"], specs["gate"] = mk(ks[1], d_model, d_ff, "mlp", 22)
+    params["down"], specs["down"] = mk(ks[2], d_ff, d_model, "embed", 23)
+    return params, specs
+
+
+def _apply_one(p, x, sp: SparsityConfig, x_is_sparse=False):
+    if "packed" in p:
+        return packed_linear_apply(p, x, sp, x_is_sparse=x_is_sparse)
+    return linear_apply(p, x)
+
+
+def ffn_apply(params, x, cfg_sp: SparsityConfig, act: str = "silu"):
+    a = _act(act)
+    up = _apply_one(params["up"], x, cfg_sp)
+    if "gate" in params:
+        h = a(_apply_one(params["gate"], x, cfg_sp)) * up
+    else:
+        h = a(up)
+    h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
+    h = apply_kwta(h, cfg_sp)  # Select (k-WTA) — identity when disabled
+    return _apply_one(params["down"], h, cfg_sp,
+                      x_is_sparse=cfg_sp.activation_sparse)

@@ -1,0 +1,179 @@
+"""The paper's end-to-end GSC keyword-spotting CNN (Table 1), in dense,
+sparse-dense and sparse-sparse variants.
+
+Architecture (paper Table 1):
+  Input 32x32x1 -> Conv 5x5x64 (VALID) -> MaxPool2 -> Conv 5x5x64 (VALID)
+  -> MaxPool2 -> Flatten 1600 -> Linear 1500 -> Output 12
+
+Variant mapping (paper §4.1):
+  dense         — everything dense (the Vitis-AI baseline analog).
+  sparse-dense  — CS weights on Conv-2 + Linear-1 (+ output), dense
+                  activations; Conv-1 left dense (their §4.1 choice).
+  sparse-sparse — CS weights + k-WTA activations everywhere downstream;
+                  Conv-1 becomes weight-sparse only ('the input to the
+                  network is dense, hence sparse-sparse is not an option
+                  for Conv-1', §4.1 / §5.4).
+
+Sparsity levels follow the paper: ~95% weights on the big layers
+(pack n=16 -> 93.75%, the nearest divisor-compatible level), activations
+k-WTA at ~12% winners (88% sparse): conv channel k-WTA k=8/64, global
+linear k-WTA k=180/1500.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import DENSE, SparsityConfig
+from repro.core.kwta import kwta, kwta_channel
+from repro.core.layers import (conv2d_apply, conv2d_init, im2col,
+                               linear_apply, linear_init, maxpool2d,
+                               packed_conv2d_apply, packed_conv2d_init,
+                               packed_linear_apply, packed_linear_init)
+from repro.core.masks import pad_to_multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class GSCConfig:
+    name: str = "gsc_cnn"
+    variant: str = "sparse_sparse"  # dense | sparse_dense | sparse_sparse
+    n_classes: int = 12
+    channels: int = 64
+    hidden: int = 1500
+    # CS pack factors (weight density 1/n)
+    conv1_n: int = 5                 # 80% sparse stem (paper §5.4 style)
+    conv2_n: int = 16                # ~94% sparse
+    linear_n: int = 16
+    # k-WTA winners
+    conv_k: int = 8                  # of 64 channels (~88% sparse)
+    linear_k: int = 180              # of 1500 (88% sparse, paper Fig. 10)
+    kwta_impl: str = "topk"
+
+    @property
+    def weight_sparse(self) -> bool:
+        return self.variant in ("sparse_dense", "sparse_sparse")
+
+    @property
+    def activation_sparse(self) -> bool:
+        return self.variant == "sparse_sparse"
+
+    @property
+    def hidden_padded(self) -> int:
+        return pad_to_multiple(self.hidden, self.linear_n)
+
+
+def init_model(key, cfg: GSCConfig) -> Tuple[Dict, Dict]:
+    ks = jax.random.split(key, 4)
+    params: Dict = {}
+    specs: Dict = {}
+    c = cfg.channels
+    if cfg.weight_sparse:
+        sp1 = SparsityConfig(n=cfg.conv1_n)
+        sp2 = SparsityConfig(n=cfg.conv2_n)
+        spl = SparsityConfig(n=cfg.linear_n)
+        params["conv1"], specs["conv1"] = packed_conv2d_init(
+            ks[0], 5, 5, 1, c, sp1, seed=41)
+        params["conv2"], specs["conv2"] = packed_conv2d_init(
+            ks[1], 5, 5, c, c, sp2, seed=42)
+        params["linear"], specs["linear"] = packed_linear_init(
+            ks[2], 5 * 5 * c, cfg.hidden_padded, spl, seed=43)
+        params["out"], specs["out"] = linear_init(
+            ks[3], cfg.hidden_padded, cfg.n_classes)
+    else:
+        params["conv1"], specs["conv1"] = conv2d_init(ks[0], 5, 5, 1, c)
+        params["conv2"], specs["conv2"] = conv2d_init(ks[1], 5, 5, c, c)
+        params["linear"], specs["linear"] = linear_init(
+            ks[2], 5 * 5 * c, cfg.hidden)
+        params["out"], specs["out"] = linear_init(ks[3], cfg.hidden,
+                                                  cfg.n_classes)
+    return params, specs
+
+
+def forward(params, x: jax.Array, cfg: GSCConfig) -> jax.Array:
+    """x: (B, 32, 32, 1) -> logits (B, n_classes)."""
+    c = cfg.channels
+    act_sparse = cfg.activation_sparse
+
+    # --- Conv-1 (stem): weight-sparse at most; input is dense (paper §5.4)
+    if cfg.weight_sparse:
+        sp1 = SparsityConfig(n=cfg.conv1_n)
+        h = packed_conv2d_apply(params["conv1"], x, sp1, 5, 5)
+    else:
+        h = conv2d_apply(params["conv1"], x)
+    h = jax.nn.relu(h) if not act_sparse else kwta_channel(
+        jax.nn.relu(h), cfg.conv_k)
+    h = maxpool2d(h)                                     # (B, 14, 14, 64)
+
+    # --- Conv-2: sparse-sparse heart of the network
+    if cfg.weight_sparse:
+        sp2 = SparsityConfig(
+            n=cfg.conv2_n,
+            k_frac=(cfg.conv_k / c) if act_sparse else None)
+        h = packed_conv2d_apply(params["conv2"], h, sp2, 5, 5,
+                                x_is_sparse=act_sparse)
+    else:
+        h = conv2d_apply(params["conv2"], h)
+    h = jax.nn.relu(h) if not act_sparse else kwta_channel(
+        jax.nn.relu(h), cfg.conv_k)
+    h = maxpool2d(h)                                     # (B, 5, 5, 64)
+    h = h.reshape(h.shape[0], -1)                        # (B, 1600)
+
+    # --- Linear-1 (+ global k-WTA, paper Fig. 10's 1500-element example)
+    if cfg.weight_sparse:
+        spl = SparsityConfig(
+            n=cfg.linear_n,
+            k_frac=(cfg.linear_k / cfg.hidden_padded) if act_sparse else None,
+            kwta_impl=cfg.kwta_impl)
+        h = packed_linear_apply(params["linear"], h, spl)
+    else:
+        h = linear_apply(params["linear"], h)
+    if act_sparse:
+        from repro.core.kwta import kwta_hist
+        h = jax.nn.relu(h)
+        h = (kwta_hist(h, cfg.linear_k) if cfg.kwta_impl == "hist"
+             else kwta(h, cfg.linear_k))
+    else:
+        h = jax.nn.relu(h)
+
+    return linear_apply(params["out"], h)
+
+
+def loss_fn(params, batch, cfg: GSCConfig):
+    logits = forward(params, batch["x"], cfg)
+    labels = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def theoretical_macs(cfg: GSCConfig) -> Dict[str, float]:
+    """Per-sample MAC counts (the paper's Figure 1 accounting)."""
+    c, hp = cfg.channels, cfg.hidden_padded
+    dense = {
+        "conv1": 28 * 28 * c * 25,
+        "conv2": 10 * 10 * c * 25 * c,
+        "linear": 1600 * cfg.hidden,
+        "out": cfg.hidden * cfg.n_classes,
+    }
+    w = {  # weight sparsity reduction
+        "conv1": cfg.conv1_n, "conv2": cfg.conv2_n, "linear": cfg.linear_n,
+        "out": 1,
+    }
+    a = {  # activation sparsity reduction (inputs to each layer)
+        "conv1": 1.0,
+        "conv2": c / cfg.conv_k,
+        "linear": c / cfg.conv_k,
+        "out": hp / cfg.linear_k,
+    }
+    total_dense = sum(dense.values())
+    sd = sum(v / w[k] for k, v in dense.items())
+    ss = sum(v / (w[k] * a[k]) for k, v in dense.items())
+    return {"dense": total_dense, "sparse_dense": sd, "sparse_sparse": ss,
+            "speedup_sd": total_dense / sd, "speedup_ss": total_dense / ss}

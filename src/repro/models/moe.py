@@ -1,0 +1,180 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (dropless up to the
+capacity factor) and expert parallelism over the "experts" logical axis.
+
+Design notes (DESIGN.md §7): MoE routing is itself *coarse-grained
+activation sparsity* — the router is a learned top-k over expert 'units',
+directly analogous to the paper's k-WTA over neurons.  Complementary
+sparsity composes inside each expert's FFN (fine-grained weight sparsity),
+giving the 'two sparsities' at two granularities.
+
+Dispatch is static-shaped and TPU-friendly:
+  1. top-k expert choice per token (router softmax),
+  2. stable argsort of the (T·k) assignments by expert id,
+  3. rank-within-expert via running offsets; tokens beyond capacity C drop,
+  4. scatter into an (E, C, d) buffer, batched expert FFN (one einsum per
+     projection, E sharded over the model axis = EP),
+  5. weighted combine back via the inverse gather.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.api import SparsityConfig
+from repro.sharding.context import constrain
+from .common import normal_init
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int, act: str, cfg_sp: SparsityConfig):
+    """Experts hold stacked SwiGLU weights (E, d, ff)/(E, ff, d).
+
+    When cfg_sp.weight_sparse, expert weights are stored packed:
+    (E, G, P, N) with a single route table shared across experts (a codesign
+    choice — routes are arbitrary, sharing keeps the HLO small; per-expert
+    connectivity diversity is preserved by the weights themselves).
+    """
+    ks = jax.random.split(key, 5)
+    params, specs = {}, {}
+    params["router"] = normal_init(ks[0], (d_model, n_experts), 0.02)
+    specs["router"] = (None, "experts")
+
+    def mk_expert(key, d_in, d_out, seed):
+        if cfg_sp.weight_sparse and d_in % cfg_sp.n == 0 and d_out % cfg_sp.n == 0:
+            from repro.core.masks import CSLayout, make_routes
+            lay = CSLayout(d_in, d_out, cfg_sp.n, cfg_sp.perm_kind)
+            g = lay.groups
+            r = g if cfg_sp.route_share == 0 else min(cfg_sp.route_share, g)
+            while g % r:
+                r -= 1
+            route = make_routes(
+                CSLayout(d_in, cfg_sp.n * (g // r), cfg_sp.n,
+                         cfg_sp.perm_kind), seed)
+            scale = np.sqrt(cfg_sp.n / d_in)
+            w = jax.random.uniform(key, (n_experts, g, lay.partitions, cfg_sp.n),
+                                   jnp.float32, -scale, scale)
+            return ({"packed": w, "route": jnp.asarray(route)},
+                    {"packed": ("experts", "mlp", None, None),
+                     "route": ("mlp", None, None)})
+        scale = 1.0 / np.sqrt(d_in)
+        w = jax.random.uniform(key, (n_experts, d_in, d_out), jnp.float32,
+                               -scale, scale)
+        return {"w": w}, {"w": ("experts", None, "mlp" if d_out == d_ff else None)}
+
+    params["up"], specs["up"] = mk_expert(ks[1], d_model, d_ff, 31)
+    if act == "silu":
+        params["gate"], specs["gate"] = mk_expert(ks[2], d_model, d_ff, 32)
+    params["down"], specs["down"] = mk_expert(ks[3], d_ff, d_model, 33)
+    if n_shared:
+        from .ffn import ffn_init
+        params["shared"], specs["shared"] = ffn_init(
+            ks[4], d_model, n_shared * d_ff, cfg_sp, act)
+    return params, specs
+
+
+def _expert_matmul(p, x, sp: SparsityConfig):
+    """Batched expert projection: x (..., E, C, d_in) -> (..., E, C,
+    d_out)."""
+    if "packed" in p:
+        from repro.core import functional as F
+        pk = p["packed"].astype(x.dtype)
+        fn = lambda xe, pe: F.cs_matmul(xe, pe, p["route"])  # noqa: E731
+        over_e = jax.vmap(fn, in_axes=(0, 0))
+        if x.ndim == 4:  # leading group axis
+            return jax.vmap(over_e, in_axes=(0, None))(x, pk)
+        return over_e(x, pk)
+    return jnp.einsum("...ecd,edf->...ecf", x, p["w"].astype(x.dtype))
+
+
+def _dispatch_group(xg, top_p, top_e, e: int, k: int, cap: int):
+    """Sort-based dispatch for ONE token group.
+
+    xg: (Tg, d); top_p/top_e: (Tg, k). Returns (buf (E, C, d),
+    e_sorted, rank_c, keep, w_sorted, tok_sorted) for the combine."""
+    tg, d = xg.shape
+    e_flat = top_e.reshape(-1)                               # (Tg*k,)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = order // k
+    counts = jnp.bincount(e_sorted, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(tg * k) - starts[e_sorted]
+    keep = rank < cap
+    rank_c = jnp.where(keep, rank, cap - 1).astype(jnp.int32)
+    buf = jnp.zeros((e, cap, d), xg.dtype)
+    src = jnp.where(keep[:, None], xg[tok_sorted], 0).astype(xg.dtype)
+    buf = buf.at[e_sorted, rank_c].add(src)                  # (E, C, d)
+    w_sorted = top_p.reshape(-1)[order]
+    return buf, e_sorted, rank_c, keep, w_sorted, tok_sorted
+
+
+def _combine_group(out, e_sorted, rank_c, keep, w_sorted, tok_sorted,
+                   tg: int):
+    gathered = out[e_sorted, rank_c]                         # (Tg*k, d)
+    contrib = gathered * (w_sorted * keep)[:, None].astype(out.dtype)
+    return jnp.zeros((tg, out.shape[-1]), out.dtype).at[tok_sorted].add(
+        contrib)
+
+
+def moe_apply(params, x, cfg, cfg_sp: SparsityConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D). Returns (y, aux_loss).
+
+    Dispatch runs **per token group** (vmapped): the group axis preserves
+    the batch sharding, so the (groups, E, C, d) buffer shards over DP x EP
+    and the scatter/sort never crosses data shards.  A single global
+    dispatch (no group axis) has no batch dim on the buffer — GSPMD
+    replicates the scatter and the 1M-token qwen3 dispatch buffer exploded
+    to ~420 GB/device (measured; see EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    # group count: one group per batch row keeps sharding natural
+    groups = b
+    tg = t // groups
+    xg = x.reshape(groups, tg, d)
+    logits = (xg @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, Tg, E)
+    top_p, top_e = lax.top_k(probs, k)                       # (G, Tg, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style, global) ----
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    # ---- per-group sort-based dispatch (vmapped) ----
+    cap = int(np.ceil(tg * k / e * cfg.capacity_factor))
+    buf, e_sorted, rank_c, keep, w_sorted, tok_sorted = jax.vmap(
+        lambda xg_, p_, e_: _dispatch_group(xg_, p_, e_, e, k, cap)
+    )(xg, top_p, top_e)
+    buf = constrain(buf, "batch", "experts", None, None)     # (G, E, C, d)
+
+    # ---- batched expert FFN (experts sharded over model = EP) ----
+    up = _expert_matmul(params["up"], buf, cfg_sp)
+    if "gate" in params:
+        h = jax.nn.silu(_expert_matmul(params["gate"], buf, cfg_sp)) * up
+    else:
+        h = jax.nn.gelu(up)
+    if cfg_sp.activation_sparse:
+        from repro.core.layers import apply_kwta
+        h = apply_kwta(h, cfg_sp)
+    out = _expert_matmul(params["down"], h, cfg_sp)          # (G, E, C, d)
+    out = constrain(out, "batch", "experts", None, None)
+
+    # ---- combine (vmapped inverse gather) ----
+    y = jax.vmap(lambda o, es, rc, kp, ws, ts: _combine_group(
+        o, es, rc, kp, ws, ts, tg))(out, e_sorted, rank_c, keep, w_sorted,
+                                    tok_sorted)
+    y = y.reshape(b, s, d)
+
+    if "shared" in params:
+        from .ffn import ffn_apply
+        y = y + ffn_apply(params["shared"], x, cfg_sp, "silu")
+    return y, aux

@@ -1,0 +1,383 @@
+"""State-space / recurrent blocks: a shared chunked-SSD scan used by both
+Mamba2 (zamba2) and mLSTM (xLSTM), plus the strictly-sequential sLSTM.
+
+Chunked SSD (the Mamba-2 'state-space duality' algorithm, also the
+chunkwise-parallel mLSTM form): with per-step scalar decay a_t and update
+S_t = a_t·S_{t-1} + k_t v_t^T, y_t = q_t·S_t, split T into chunks of L:
+
+  intra-chunk: (Q K^T ⊙ D) V with D[i,j] = exp(cum_i - cum_j)·[j <= i]
+  inter-chunk: (Q ⊙ exp(cum)) S_prev
+  state carry: S_next = exp(cum_L) S_prev + Σ_j exp(cum_L - cum_j) k_j v_j^T
+
+All contractions are MXU-shaped einsums; the only sequential dependency is
+the O(T/L) chunk scan.  Decode is the O(1) recurrent update — this is what
+makes the SSM/hybrid architectures run the `long_500k` cell that quadratic
+attention cannot (DESIGN.md §7).
+
+The mLSTM normalizer n_t = f n_{t-1} + i k_t is folded in by augmenting V
+with a ones column (y = (q·S)/max(|q·n|, 1)).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.sharding.context import constrain
+from .common import normal_init, rmsnorm_apply, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan(q, k, v, log_a, chunk: int, unroll: bool = False):
+    """q,k: (B, T, H, Dk); v: (B, T, H, Dv); log_a: (B, T, H) (<= 0).
+
+    Returns y: (B, T, H, Dv), final state (B, H, Dk, Dv).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, t)
+    if t % L:
+        raise ValueError(f"T={t} not divisible by chunk={L}")
+    nc = t // L
+
+    qc = q.reshape(b, nc, L, h, dk).swapaxes(0, 1)
+    kc = k.reshape(b, nc, L, h, dk).swapaxes(0, 1)
+    vc = v.reshape(b, nc, L, h, dv).swapaxes(0, 1)
+    lac = log_a.reshape(b, nc, L, h).swapaxes(0, 1)
+    causal = np.tril(np.ones((L, L), bool))
+
+    @jax.checkpoint  # recompute intra-chunk scores in the backward pass
+    def body(S, xs):
+        qb, kb, vb, lab = xs                     # (B, L, H, *)
+        cum = jnp.cumsum(lab, axis=1)            # (B, L, H) inclusive
+        # intra-chunk
+        scores = jnp.einsum("bihd,bjhd->bhij", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32))
+        decay = cum[:, :, None] - cum[:, None, :]   # (B, L_i, L_j, H)
+        decay = jnp.transpose(decay, (0, 3, 1, 2))  # (B, H, L, L)
+        dmask = jnp.where(causal[None, None], jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", scores * dmask,
+                             vb.astype(jnp.float32))
+        # inter-chunk
+        qdec = qb.astype(jnp.float32) * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bihd,bhde->bihe", qdec, S)
+        # state update
+        tot = cum[:, -1:, :]                       # (B, 1, H)
+        kdec = kb.astype(jnp.float32) * jnp.exp(tot - cum)[..., None]
+        S_new = (jnp.exp(tot[:, 0, :, None, None]) * S
+                 + jnp.einsum("bjhd,bjhe->bhde", kdec, vb.astype(jnp.float32)))
+        return S_new, (y_intra + y_inter).astype(v.dtype)
+
+    S0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    S_fin, yc = lax.scan(body, S0, (qc, kc, vc, lac),
+                         unroll=nc if unroll else 1)
+    y = yc.swapaxes(0, 1).reshape(b, t, h, dv)
+    return y, S_fin
+
+
+def ssd_step(S, q, k, v, log_a):
+    """O(1) recurrent decode step. q,k: (B,H,Dk); v: (B,H,Dv); log_a: (B,H).
+    Returns (y (B,H,Dv), S_new)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    S_new = a * S + jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                               v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), S_new)
+    return y.astype(v.dtype), S_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    nh = d_inner // hd
+    ds = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * ds
+    params = {
+        # projects to [x (d_inner), B (ds), C (ds), dt (nh), z (d_inner)]
+        "in_proj": normal_init(ks[0], (d, d_inner + 2 * ds + nh + d_inner),
+                               0.02),
+        "conv_w": normal_init(ks[1], (cfg.conv_kernel, conv_dim), 0.1),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": normal_init(ks[2], (d_inner, d), 0.02),
+        "norm": rmsnorm_init(d_inner)[0],
+    }
+    specs = {
+        "in_proj": (None, "mlp"), "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",), "A_log": ("mlp",), "dt_bias": ("mlp",),
+        "D": ("mlp",), "out_proj": ("mlp", None), "norm": {"scale": (None,)},
+    }
+    return params, specs
+
+
+def _mamba2_project(params, x, cfg):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    ds = cfg.ssm_state
+    nh = d_inner // cfg.ssm_head_dim
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    xs = jnp.split(zxbcdt, [d_inner, d_inner + ds, d_inner + 2 * ds,
+                            d_inner + 2 * ds + nh], axis=-1)
+    xin, B, C, dt, z = xs
+    return xin, B, C, dt, z
+
+
+def _causal_conv(seq, w, b, cache=None):
+    """Depthwise causal conv over time. seq: (B, T, C); w: (K, C).
+
+    With ``cache`` ((B, K-1, C) trailing context) performs the streaming
+    update and returns (out, new_cache)."""
+    kk = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((seq.shape[0], kk - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = cache
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i].astype(seq.dtype)
+              for i in range(kk))
+    out = out + b.astype(seq.dtype)
+    new_cache = full[:, -(kk - 1):] if kk > 1 else pad
+    return jax.nn.silu(out), new_cache
+
+
+def mamba2_apply(params, x, cfg):
+    """Training/prefill forward. x: (B, T, D)."""
+    b, t, d = x.shape
+    hd = cfg.ssm_head_dim
+    d_inner = cfg.ssm_expand * d
+    nh = d_inner // hd
+    ds = cfg.ssm_state
+    xin, B, C, dt, z = _mamba2_project(params, x, cfg)
+    xbc, _ = _causal_conv(jnp.concatenate([xin, B, C], axis=-1),
+                          params["conv_w"], params["conv_b"])
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])               # (B,T,nh)
+    log_a = -jnp.exp(params["A_log"])[None, None] * dt      # (B,T,nh) <= 0
+    xh = xin.reshape(b, t, nh, hd)
+    # B/C are shared across heads (Mamba2 'multi-value' pattern)
+    k = jnp.broadcast_to(B[:, :, None, :], (b, t, nh, ds))
+    q = jnp.broadcast_to(C[:, :, None, :], (b, t, nh, ds))
+    kdt = k * dt[..., None].astype(k.dtype)
+    y, _ = ssd_scan(q, kdt, xh, log_a, cfg.ssm_chunk,
+                    unroll=cfg.unroll_inner)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, t, d_inner) * jax.nn.silu(z)
+    y = rmsnorm_apply(params["norm"], y)
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def mamba2_cache_init(cfg, batch: int, dtype):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return {"S": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim),
+                           jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype)}
+
+
+def mamba2_cache_specs():
+    return {"S": ("batch", "mlp", None, None),
+            "conv": ("batch", None, "mlp")}
+
+
+def mamba2_decode(params, x, cfg, cache, pos):
+    """One-token step: O(1) state update (the long_500k path)."""
+    del pos
+    b, t, d = x.shape
+    hd = cfg.ssm_head_dim
+    d_inner = cfg.ssm_expand * d
+    nh = d_inner // hd
+    ds = cfg.ssm_state
+    xin, B, C, dt, z = _mamba2_project(params, x, cfg)
+    xbc, conv_new = _causal_conv(jnp.concatenate([xin, B, C], axis=-1),
+                                 params["conv_w"], params["conv_b"],
+                                 cache["conv"])
+    xin, B, C = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    log_a = (-jnp.exp(params["A_log"])[None, None] * dt)[:, 0]   # (B, nh)
+    xh = xin.reshape(b, nh, hd)
+    k = jnp.broadcast_to(B[:, 0, None, :], (b, nh, ds))
+    q = jnp.broadcast_to(C[:, 0, None, :], (b, nh, ds))
+    kdt = k * dt[:, 0, :, None].astype(k.dtype)
+    y, S_new = ssd_step(cache["S"], q, kdt, xh, log_a)
+    y = y + params["D"][None, :, None].astype(y.dtype) * xh
+    y = (y.reshape(b, 1, d_inner) * jax.nn.silu(z))
+    y = rmsnorm_apply(params["norm"], y)
+    return y @ params["out_proj"].astype(x.dtype), \
+        {"S": S_new, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    params = {
+        "qkv": normal_init(ks[0], (d, 3 * d), 0.02),
+        "gates": normal_init(ks[1], (d, 2 * h), 0.02),   # i, f per head
+        "gate_b": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "out_proj": normal_init(ks[2], (d, d), 0.02),
+        "norm": rmsnorm_init(d)[0],
+        "skip": jnp.ones((h,), jnp.float32),
+    }
+    specs = {"qkv": (None, "heads"), "gates": (None, "heads"),
+             "gate_b": ("heads",), "out_proj": ("heads", None),
+             "norm": {"scale": (None,)}, "skip": ("heads",)}
+    return params, specs
+
+
+def _mlstm_qkvg(params, x, cfg):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    qkv = x @ params["qkv"].astype(x.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, dh)
+    k = k.reshape(b, t, h, dh) / np.sqrt(dh)
+    v = v.reshape(b, t, h, dh)
+    gates = (x @ params["gates"].astype(x.dtype)).astype(jnp.float32)
+    gates = gates + params["gate_b"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                  # (B, T, H)
+    log_f = jax.nn.log_sigmoid(fg)
+    i = jnp.exp(jax.nn.log_sigmoid(ig))  # sigmoid input gate (stabilized)
+    return q, k, v, i, log_f
+
+
+def _mlstm_finalize(params, y_aug, xh, cfg):
+    """Split the augmented value (v, 1) -> normalize, skip, project."""
+    b, t = y_aug.shape[:2]
+    h = cfg.n_heads
+    y, nrm = y_aug[..., :-1], y_aug[..., -1:]
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    y = y + params["skip"][None, None, :, None].astype(y.dtype) * xh
+    d = cfg.d_model
+    y = rmsnorm_apply(params["norm"], y.reshape(b, t, d))
+    return y @ params["out_proj"].astype(y.dtype)
+
+
+def mlstm_apply(params, x, cfg):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    q, k, v, i, log_f = _mlstm_qkvg(params, x, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones((b, t, h, 1), v.dtype)], axis=-1)
+    ki = k * i[..., None].astype(k.dtype)
+    y_aug, _ = ssd_scan(q, ki, v_aug, log_f, cfg.ssm_chunk,
+                        unroll=cfg.unroll_inner)
+    return _mlstm_finalize(params, y_aug, q, cfg)
+
+
+def mlstm_cache_init(cfg, batch: int, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    return {"S": jnp.zeros((batch, h, dh, dh + 1), jnp.float32)}
+
+
+def mlstm_cache_specs():
+    return {"S": ("batch", "heads", None, None)}
+
+
+def mlstm_decode(params, x, cfg, cache, pos):
+    del pos
+    b, t, d = x.shape
+    h = cfg.n_heads
+    q, k, v, i, log_f = _mlstm_qkvg(params, x, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones((b, t, h, 1), v.dtype)], axis=-1)
+    ki = (k * i[..., None].astype(k.dtype))[:, 0]
+    y_aug, S_new = ssd_step(cache["S"], q[:, 0], ki, v_aug[:, 0], log_f[:, 0])
+    y = _mlstm_finalize(params, y_aug[:, None], q, cfg)
+    return y, {"S": S_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): strictly sequential scalar-memory recurrence
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    params = {
+        "wx": normal_init(ks[0], (d, 4 * d), 0.02),         # z i f o
+        "r": normal_init(ks[1], (h, dh, 4 * dh), 1.0 / np.sqrt(dh)),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "out_proj": normal_init(ks[2], (d, d), 0.02),
+        "norm": rmsnorm_init(d)[0],
+    }
+    specs = {"wx": (None, "heads"), "r": ("heads", None, None),
+             "b": ("heads",), "out_proj": (None, None),
+             "norm": {"scale": (None,)}}
+    return params, specs
+
+
+def _slstm_cell(params, cfg, carry, zx):
+    """One recurrent step. carry: (h, c, n); zx: (B, 4D) pre-activations."""
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    h_prev, c_prev, n_prev = carry
+    hr = jnp.einsum("bhd,hde->bhe", h_prev.reshape(-1, nh, dh),
+                    params["r"].astype(h_prev.dtype)).reshape(-1, 4 * d)
+    pre = (zx + hr).astype(jnp.float32) + params["b"]
+    z, ig, fg, og = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jnp.exp(jnp.minimum(ig, 0.0))        # stabilized exponential gate
+    f = jax.nn.sigmoid(fg)
+    o = jax.nn.sigmoid(og)
+    c = f * c_prev + i * z
+    n = f * n_prev + i
+    h_new = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (h_new.astype(h_prev.dtype), c, n)
+
+
+def slstm_apply(params, x, cfg):
+    b, t, d = x.shape
+    zx = x @ params["wx"].astype(x.dtype)                   # (B, T, 4D)
+
+    def step(carry, zx_t):
+        carry = _slstm_cell(params, cfg, carry, zx_t)
+        return carry, carry[0]
+
+    init = (jnp.zeros((b, d), x.dtype), jnp.zeros((b, d), jnp.float32),
+            jnp.zeros((b, d), jnp.float32))
+    _, hs = lax.scan(step, init, zx.swapaxes(0, 1))
+    y = rmsnorm_apply(params["norm"], hs.swapaxes(0, 1))
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def slstm_cache_init(cfg, batch: int, dtype):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32)}
+
+
+def slstm_cache_specs():
+    return {"h": ("batch", None), "c": ("batch", None), "n": ("batch", None)}
+
+
+def slstm_decode(params, x, cfg, cache, pos):
+    del pos
+    zx = (x @ params["wx"].astype(x.dtype))[:, 0]
+    carry = (cache["h"], cache["c"], cache["n"])
+    h_new, c, n = _slstm_cell(params, cfg, carry, zx)
+    y = rmsnorm_apply(params["norm"], h_new[:, None])
+    y = y @ params["out_proj"].astype(x.dtype)
+    return y, {"h": h_new, "c": c, "n": n}

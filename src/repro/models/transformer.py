@@ -1,0 +1,319 @@
+"""Decoder LM assembled from config-driven blocks.
+
+The layer stack is a ``lax.scan`` over *superblocks* (one repetition of
+``cfg.block_pattern``) with stacked params — compile time and HLO size stay
+O(pattern), not O(n_layers).  Heterogeneous stacks (xLSTM's mLSTM+sLSTM,
+zamba2's mamba2+shared-attention) are expressed inside the pattern;
+zamba2's weight-shared attention block lives *outside* the scanned params
+(a closure constant — the same weights at every invocation, which is
+exactly the Zamba trick).
+
+Block kinds:
+  attn        — (MLA when cfg.use_mla) attention + FFN or MoE, pre-norm.
+  mamba2      — Mamba-2 mixer (chunked SSD).
+  mlstm/slstm — xLSTM mixers.
+  shared_attn — weight-shared attention + FFN block (zamba2).
+
+Two entry points per workload:
+  :func:`loss_fn` / :func:`forward` — training & prefill (full sequence).
+  :func:`serve_step` + :func:`init_cache` — one-token decode with caches
+  (KV for attention; O(1) state for SSM blocks — the `long_500k` path).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.sharding.context import constrain, is_spec as _is_spec
+from . import attention as A
+from . import ssm as S
+from .common import (cross_entropy, dtype_of, embedding_init, rmsnorm_apply,
+                     rmsnorm_init)
+from .ffn import ffn_apply, ffn_init
+from .moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply/decode dispatch
+# ---------------------------------------------------------------------------
+
+def _block_init(kind: str, key, cfg):
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "shared_attn"):
+        p, s = {}, {}
+        p["norm1"], s["norm1"] = rmsnorm_init(cfg.d_model)
+        if cfg.use_mla:
+            p["mixer"], s["mixer"] = A.mla_init(ks[0], cfg)
+        else:
+            p["mixer"], s["mixer"] = A.gqa_init(ks[0], cfg)
+        p["norm2"], s["norm2"] = rmsnorm_init(cfg.d_model)
+        if cfg.is_moe and kind == "attn":
+            p["moe"], s["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff,
+                                          cfg.n_experts, cfg.n_shared_experts,
+                                          cfg.act, cfg.ffn_sparsity)
+        elif cfg.d_ff > 0:
+            p["ffn"], s["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff,
+                                          cfg.ffn_sparsity, cfg.act)
+        return p, s
+    if kind == "mamba2":
+        p, s = {}, {}
+        p["norm"], s["norm"] = rmsnorm_init(cfg.d_model)
+        p["mixer"], s["mixer"] = S.mamba2_init(ks[0], cfg)
+        return p, s
+    if kind == "mlstm":
+        p, s = {}, {}
+        p["norm"], s["norm"] = rmsnorm_init(cfg.d_model)
+        p["mixer"], s["mixer"] = S.mlstm_init(ks[0], cfg)
+        return p, s
+    if kind == "slstm":
+        p, s = {}, {}
+        p["norm"], s["norm"] = rmsnorm_init(cfg.d_model)
+        p["mixer"], s["mixer"] = S.slstm_init(ks[0], cfg)
+        return p, s
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _block_apply(kind: str, params, x, cfg, positions):
+    """Full-sequence forward. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "shared_attn"):
+        h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        if cfg.use_mla:
+            h = A.mla_apply(params["mixer"], h, cfg, positions)
+        else:
+            h = A.gqa_apply(params["mixer"], h, cfg, positions)
+        x = x + h
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        if "moe" in params:
+            h, aux = moe_apply(params["moe"], h, cfg, cfg.ffn_sparsity)
+            x = x + h
+        elif "ffn" in params:
+            x = x + ffn_apply(params["ffn"], h, cfg.ffn_sparsity, cfg.act)
+        return x, aux
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps)
+    mixer = {"mamba2": S.mamba2_apply, "mlstm": S.mlstm_apply,
+             "slstm": S.slstm_apply}[kind]
+    return x + mixer(params["mixer"], h, cfg), aux
+
+
+def _block_cache_init(kind: str, cfg, batch: int, max_seq: int, dtype):
+    if kind in ("attn", "shared_attn"):
+        if cfg.use_mla:
+            return A.mla_cache_init(cfg, batch, max_seq, dtype), \
+                A.mla_cache_specs()
+        return A.gqa_cache_init(cfg, batch, max_seq, dtype), \
+            A.gqa_cache_specs(cfg)
+    init = {"mamba2": S.mamba2_cache_init, "mlstm": S.mlstm_cache_init,
+            "slstm": S.slstm_cache_init}[kind]
+    specs = {"mamba2": S.mamba2_cache_specs, "mlstm": S.mlstm_cache_specs,
+             "slstm": S.slstm_cache_specs}[kind]
+    return init(cfg, batch, dtype), specs()
+
+
+def _block_decode(kind: str, params, x, cfg, cache, pos):
+    """One-token step. Returns (x, new_cache)."""
+    if kind in ("attn", "shared_attn"):
+        h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        dec = A.mla_decode if cfg.use_mla else A.gqa_decode
+        h, new_cache = dec(params["mixer"], h, cfg, cache, pos)
+        x = x + h
+        h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        if "moe" in params:
+            h, _ = moe_apply(params["moe"], h, cfg, cfg.ffn_sparsity)
+            x = x + h
+        elif "ffn" in params:
+            x = x + ffn_apply(params["ffn"], h, cfg.ffn_sparsity, cfg.act)
+        return x, new_cache
+    h = rmsnorm_apply(params["norm"], x, cfg.norm_eps)
+    dec = {"mamba2": S.mamba2_decode, "mlstm": S.mlstm_decode,
+           "slstm": S.slstm_decode}[kind]
+    h, new_cache = dec(params["mixer"], h, cfg, cache, pos)
+    return x + h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg) -> Tuple[Dict, Dict]:
+    """Returns (params, specs).  params["units"] leaves have leading dim
+    n_units (scanned); params["shared"] (if any) is the zamba2 shared
+    block."""
+    keys = jax.random.split(key, cfg.n_units + 3)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["embed"], specs["embed"] = embedding_init(
+        keys[0], cfg.padded_vocab, cfg.d_model)
+
+    has_shared = "shared_attn" in cfg.block_pattern
+    if has_shared:
+        params["shared"], specs["shared"] = _block_init("shared_attn",
+                                                        keys[1], cfg)
+
+    def unit_init(key):
+        ks = jax.random.split(key, len(cfg.block_pattern))
+        p, s = {}, {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "shared_attn":
+                continue  # weights live in params["shared"]
+            p[f"b{i}"], s[f"b{i}"] = _block_init(kind, ks[i], cfg)
+        return p, s
+
+    unit_ps = [unit_init(keys[2 + u]) for u in range(cfg.n_units)]
+    params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *
+                                   [p for p, _ in unit_ps])
+    # specs: identical across units; prepend the (unsharded) layer axis
+    unit_spec = unit_ps[0][1]
+    specs["units"] = jax.tree.map(
+        lambda sp: (None,) + tuple(sp), unit_spec,
+        is_leaf=_is_spec)
+
+    params["final_norm"], specs["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        from .common import normal_init
+        params["head"] = {"table": normal_init(keys[-1],
+                                               (cfg.padded_vocab, cfg.d_model),
+                                               0.02)}
+        specs["head"] = {"table": ("vocab", "embed")}
+    return params, specs
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg, ct):
+    """Token/frontend embedding. Returns (x, loss_mask)."""
+    if cfg.frontend == "embed":
+        x = batch["embeds"].astype(ct)  # (B, S, D) precomputed (stub)
+        mask = None
+    elif cfg.frontend == "vision_prefix":
+        tok = jnp.take(params["embed"]["table"].astype(ct),
+                       batch["tokens"], axis=0)
+        x = jnp.concatenate([batch["patch_embeds"].astype(ct), tok], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(batch["patch_embeds"].shape[:2], bool),
+             jnp.ones(batch["tokens"].shape, bool)], axis=1)
+    else:
+        x = jnp.take(params["embed"]["table"].astype(ct),
+                     batch["tokens"], axis=0)
+        mask = None
+    return constrain(x, "batch", "seq", None), mask
+
+
+def forward(params, batch, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    ct = dtype_of(cfg.compute_dtype)
+    x, _ = _embed_inputs(params, batch, cfg, ct)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared = params.get("shared")
+
+    def unit_fn(carry, unit_params):
+        x, aux = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
+            apply = lambda p, x, k=kind: _block_apply(k, p, x, cfg, positions)
+            if cfg.remat:
+                # block-granular remat: backward holds at most one block's
+                # intermediates (the scan carry is the remat stack)
+                apply = jax.checkpoint(apply)
+            x, a = apply(p, x)
+            aux = aux + a
+        x = constrain(x, "batch", "seq", None)
+        return (x, aux), None
+
+    (x, aux), _ = lax.scan(unit_fn, (x, jnp.zeros((), jnp.float32)),
+                           params["units"])
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
+    logits = x @ table.astype(ct).T
+    return constrain(logits, "batch", "seq", "vocab"), aux
+
+
+def loss_fn(params, batch, cfg):
+    """Next-token LM loss. batch: tokens/embeds (+ labels)."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_prefix":
+        # logits cover [prefix + text]; predict text tokens only
+        n_pre = batch["patch_embeds"].shape[1]
+        logits = logits[:, n_pre:]
+    lm = cross_entropy(logits[:, :-1], labels[:, 1:])
+    loss = lm + cfg.router_aux_weight * aux
+    return loss, {"loss": loss, "lm_loss": lm, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving (one-token decode with caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int):
+    """Stacked per-unit caches: each leaf has leading dim n_units."""
+    ct = dtype_of(cfg.compute_dtype)
+    unit_cache, unit_specs = {}, {}
+    for i, kind in enumerate(cfg.block_pattern):
+        c, sp = _block_cache_init(kind, cfg, batch, max_seq, ct)
+        unit_cache[f"b{i}"], unit_specs[f"b{i}"] = c, sp
+    cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_units, *x.shape)), unit_cache)
+    specs = jax.tree.map(
+        lambda sp: (None,) + tuple(sp), unit_specs,
+        is_leaf=_is_spec)
+    return cache, specs
+
+
+def serve_step(params, cache, batch, pos, cfg):
+    """Decode one token at position ``pos`` given caches of past state.
+
+    batch: {"tokens": (B, 1)} (or {"embeds": (B, 1, D)}).
+    Returns (logits (B, vocab), new_cache).
+    """
+    ct = dtype_of(cfg.compute_dtype)
+    if cfg.frontend == "embed":
+        x = batch["embeds"].astype(ct)
+    else:
+        x = jnp.take(params["embed"]["table"].astype(ct), batch["tokens"],
+                     axis=0)
+    shared = params.get("shared")
+
+    def unit_fn(x, scanned):
+        unit_params, unit_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
+            x, new_cache[f"b{i}"] = _block_decode(kind, p, x, cfg,
+                                                  unit_cache[f"b{i}"], pos)
+        return x, new_cache
+
+    x, new_cache = lax.scan(unit_fn, x, (params["units"], cache))
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
+    logits = (x @ table.astype(ct).T)[:, 0]
+    return constrain(logits, "batch", "vocab"), new_cache
+
+
+def unit_step_fn(cfg):
+    """A single-superblock forward for per-layer cost accounting (the
+    roofline reads FLOPs from this, times n_units — lax.scan bodies are
+    counted once by XLA's cost analysis; see launch/roofline.py)."""
+
+    def fn(unit_params, shared, x, positions):
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.block_pattern):
+            p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
+            x, a = _block_apply(kind, p, x, cfg, positions)
+            aux += a
+        return x, aux
+
+    return fn

@@ -1,0 +1,117 @@
+"""AdamW from scratch (no optax in this environment), pytree-native.
+
+Production features:
+  * integer/route leaves are transparently skipped (CS route tables live in
+    the params pytree but are not trained),
+  * moment dtype is configurable — ``bfloat16`` halves optimizer-state HBM
+    (the 'optimizer-state compression' trick that lets qwen3-235B fit the
+    assigned mesh, DESIGN.md §6; quality impact is the documented trade),
+  * ZeRO-1: moment specs inherit the param specs, and the launcher
+    additionally shards them over the DP axes when ``zero1=True``,
+  * global-norm gradient clipping in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import is_spec as _is_spec
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+def init_state(params, cfg: AdamWConfig) -> Dict:
+    """Moments mirror float params; int leaves get empty placeholders."""
+
+    def mk(p):
+        if _is_float(p):
+            return jnp.zeros(p.shape, cfg.moment_dtype)
+        return jnp.zeros((), jnp.int32)  # placeholder for int leaves
+
+    return {
+        "mu": jax.tree.map(mk, params),
+        "nu": jax.tree.map(mk, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(param_specs, params_shapes=None):
+    """Moment sharding specs mirror the param specs (ZeRO extension is
+    applied by the launcher on top)."""
+    def leaf_spec(sp):
+        return sp
+
+    return {
+        "mu": jax.tree.map(leaf_spec, param_specs,
+                           is_leaf=_is_spec),
+        "nu": jax.tree.map(leaf_spec, param_specs,
+                           is_leaf=_is_spec),
+        "step": (),
+    }
+
+
+def global_norm(grads) -> jax.Array:
+    leaves = [g for g in jax.tree.leaves(grads) if _is_float(g)]
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+
+    def f(g):
+        return (g.astype(jnp.float32) * scale).astype(g.dtype) \
+            if _is_float(g) else g
+
+    return jax.tree.map(f, grads), norm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr_scale: jax.Array = 1.0) -> Tuple[Dict, Dict, Dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        if not _is_float(p):
+            return p, mu, nu
+        g32 = g.astype(jnp.float32)
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        upd = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return p_new, mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"mu": tdef.unflatten([o[1] for o in out]),
+                 "nu": tdef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,8 @@
+"""Runtime: fault tolerance, straggler detection, elastic restart, pipeline
+parallelism."""
+
+from .monitor import LossGuard, StepEvent, StepMonitor
+from .pipeline_parallel import bubble_fraction, pipeline_apply
+
+__all__ = ["LossGuard", "StepEvent", "StepMonitor", "bubble_fraction",
+           "pipeline_apply"]

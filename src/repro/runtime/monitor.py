@@ -1,0 +1,106 @@
+"""Step-time monitoring and straggler/anomaly detection.
+
+At multi-pod scale the common failure modes are (a) a straggling host
+slowing every synchronous step, (b) a hung collective, (c) loss spikes
+from data or hardware corruption.  ``StepMonitor`` tracks a step-time EMA
+and flags steps above ``straggler_factor`` x EMA; a sustained run of flags
+trips ``should_reshard`` (the elastic-restart signal consumed by the train
+driver).  ``LossGuard`` flags NaN/exploding losses so the driver can roll
+back to the last checkpoint instead of corrupting the run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StepEvent:
+    step: int
+    duration: float
+    flagged: bool
+
+
+class StepMonitor:
+    def __init__(self, straggler_factor: float = 2.5, ema_decay: float = 0.9,
+                 warmup_steps: int = 3, trip_after: int = 5):
+        self.factor = straggler_factor
+        self.decay = ema_decay
+        self.warmup = warmup_steps
+        self.trip_after = trip_after
+        self.ema: Optional[float] = None
+        self.events: List[StepEvent] = []
+        self._consecutive = 0
+        self._n = 0
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> StepEvent:
+        assert self._t0 is not None, "stop() without start()"
+        dur = time.monotonic() - self._t0
+        self._t0 = None
+        return self.record(step, dur)
+
+    def record(self, step: int, duration: float) -> StepEvent:
+        self._n += 1
+        flagged = False
+        if self.ema is None:
+            self.ema = duration
+        else:
+            if self._n > self.warmup and duration > self.factor * self.ema:
+                flagged = True
+                self._consecutive += 1
+            else:
+                self._consecutive = 0
+            # EMA excludes flagged outliers so one straggler doesn't poison
+            # the baseline
+            if not flagged:
+                self.ema = self.decay * self.ema + (1 - self.decay) * duration
+        ev = StepEvent(step, duration, flagged)
+        self.events.append(ev)
+        return ev
+
+    @property
+    def should_reshard(self) -> bool:
+        """Sustained stragglers -> the driver should checkpoint and rebuild
+        the mesh from live devices (elastic restart)."""
+        return self._consecutive >= self.trip_after
+
+    def summary(self) -> dict:
+        durs = [e.duration for e in self.events]
+        if not durs:
+            return {}
+        return {
+            "steps": len(durs),
+            "mean_s": sum(durs) / len(durs),
+            "ema_s": self.ema,
+            "flagged": sum(e.flagged for e in self.events),
+            "p50_s": sorted(durs)[len(durs) // 2],
+            "max_s": max(durs),
+        }
+
+
+class LossGuard:
+    """Rolls back on NaN/inf or explosive loss (> spike_factor x EMA)."""
+
+    def __init__(self, spike_factor: float = 10.0, ema_decay: float = 0.95):
+        self.factor = spike_factor
+        self.decay = ema_decay
+        self.ema: Optional[float] = None
+
+    def check(self, loss: float) -> bool:
+        """Returns True if the step is healthy; False -> roll back."""
+        import math
+        if not math.isfinite(loss):
+            return False
+        if self.ema is None:
+            self.ema = loss
+            return True
+        if loss > self.factor * max(self.ema, 1e-6) and self.ema > 0:
+            return False
+        self.ema = self.decay * self.ema + (1 - self.decay) * loss
+        return True

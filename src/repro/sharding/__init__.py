@@ -1,0 +1,8 @@
+"""Sharding: logical-axis rules resolved against production meshes."""
+
+from .axes import dp_axes, make_rules, tp_axis
+from .context import (Rules, constrain, get_rules, param_sharding, set_rules,
+                      use_rules)
+
+__all__ = ["dp_axes", "make_rules", "tp_axis", "Rules", "constrain",
+           "get_rules", "param_sharding", "set_rules", "use_rules"]

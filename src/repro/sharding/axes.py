@@ -1,0 +1,61 @@
+"""Rule tables: logical axis -> mesh axes, per (mesh, workload kind).
+
+Parallelism map (DESIGN.md §6):
+  DP   : "batch"  -> ("pod", "data")      (pod axis folds into DP)
+  TP   : "heads" / "mlp" / "vocab" / "kv" -> "model"
+  EP   : "experts" -> "model"
+  SP   : "kvseq" (KV-cache sequence) -> "model" for decode; for batch=1
+         long-context also "data" — exact sharded softmax is handled by
+         GSPMD's reductions.
+ZeRO-1: optimizer moments additionally shard over the DP axes (see
+repro/optim/adamw.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from jax.sharding import Mesh
+
+from .context import MeshAxes, Rules
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def tp_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.shape else None
+
+
+def make_rules(mesh: Mesh, kind: str = "train") -> Rules:
+    """Rule table for a workload kind: train | prefill | decode | decode_long.
+
+    ``decode_long`` (batch too small to shard) moves the DP axes onto the
+    KV-cache sequence dimension — sequence parallelism for the 500k-token
+    cache.
+    """
+    dp: MeshAxes = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    table: Dict[str, MeshAxes] = {
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "heads": tp,
+        "kv": tp,
+        "mlp": tp,
+        "vocab": tp,
+        "experts": tp,
+        "kvseq": None,
+    }
+    if kind in ("decode", "serve"):
+        table["kvseq"] = tp  # shard the 32k cache over model
+    elif kind == "decode_long":
+        table["batch"] = None
+        table["kvseq"] = tuple(list(dp) + ([tp] if tp else []))
+        table["seq"] = None
+    elif kind == "prefill":
+        # sequence-parallel the activations across DP if batch is tiny;
+        # handled by the divisibility fallback on "batch".
+        pass
+    return Rules(mesh=mesh, table=table)

@@ -1,0 +1,11 @@
+"""Test session setup: 8 fake CPU devices for the distribution tests.
+
+NOTE: this is test-only. The dry-run sets its own 512-device flag in
+repro/launch/dryrun.py (before any import), and production uses real
+devices; smoke tests run fine under 8 devices because every sharding rule
+falls back to replication when dims don't divide.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward + one train step + one decode step on CPU, asserting shapes and
+finiteness. (Full configs are exercised via the dry-run only.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config
+from repro.data import batch_for
+from repro.launch.steps import make_train_step
+from repro.models import init_cache, init_model, loss_fn, serve_step
+from repro.optim import init_state
+
+
+class _Shape:
+    seq_len = 32
+    global_batch = 2
+
+
+def _batch(cfg):
+    return {k: jnp.asarray(v)
+            for k, v in batch_for(cfg, _Shape, step=0).items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params, specs = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert 0 < float(loss) < 20
+
+    train_step, acfg = make_train_step(cfg, TrainConfig(lr=1e-3))
+    opt = init_state(params, acfg)
+    params2, opt2, m = jax.jit(train_step)(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(opt2["step"]) == 1
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params2),
+                                jax.tree.leaves(params))
+                if jnp.issubdtype(a.dtype, jnp.floating))
+    assert delta > 0, f"{arch}: train step was a no-op"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    b = 2
+    cache, _ = init_cache(cfg, b, 16)
+    if cfg.frontend == "embed":
+        batch = {"embeds": jax.random.normal(jax.random.PRNGKey(1),
+                                             (b, 1, cfg.d_model),
+                                             jnp.bfloat16)}
+    else:
+        batch = {"tokens": jnp.ones((b, 1), jnp.int32)}
+    logits, cache2 = serve_step(params, cache, batch, 3, cfg)
+    assert logits.shape == (b, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache was actually updated
+    changed = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(bb, np.float32))
+        for a, bb in zip(jax.tree.leaves(cache2), jax.tree.leaves(cache)))
+    assert changed, f"{arch}: decode did not update any cache"
+
+
+def test_decode_matches_forward_smollm():
+    """Step-by-step decode must reproduce the full forward's logits
+    (KV-cache correctness, the serving-path invariant)."""
+    cfg = get_config("smollm_360m").reduced(remat=False)
+    params, _ = init_model(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                              cfg.vocab_size)
+    from repro.models import forward
+    full_logits, _ = forward(params, {"tokens": toks}, cfg)
+    cache, _ = init_cache(cfg, 2, 8)
+    for pos in range(8):
+        logits, cache = serve_step(params, cache,
+                                   {"tokens": toks[:, pos:pos + 1]}, pos, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(full_logits[:, -1], np.float32), atol=0.15, rtol=0.05)
+
+
+def test_decode_matches_forward_ssm():
+    """Same invariant for the recurrent-state (SSM) cache path."""
+    cfg = get_config("xlstm_350m").reduced(remat=False)
+    params, _ = init_model(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                              cfg.vocab_size)
+    from repro.models import forward
+    full_logits, _ = forward(params, {"tokens": toks}, cfg)
+    cache, _ = init_cache(cfg, 2, 16)
+    for pos in range(16):
+        logits, cache = serve_step(params, cache,
+                                   {"tokens": toks[:, pos:pos + 1]}, pos, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(full_logits[:, -1], np.float32), atol=0.15, rtol=0.05)
+
+
+def test_head_padding_exactness():
+    """head_pad must not change the function (dummy heads are masked)."""
+    import dataclasses
+    cfg = get_config("smollm_360m").reduced(remat=False, n_heads=3,
+                                            n_kv_heads=1, head_pad=0)
+    cfg_pad = dataclasses.replace(cfg, head_pad=4)
+    params, _ = init_model(jax.random.PRNGKey(3), cfg)
+    params_pad, _ = init_model(jax.random.PRNGKey(3), cfg_pad)
+    # copy the unpadded o-proj rows into the padded one; dummy rows zeroed
+
+    def fix(tree_pad, tree):
+        for i in range(cfg.n_units):
+            pass
+        return tree_pad
+
+    # instead: run the padded config with o rows beyond h*dh zeroed is
+    # guaranteed by masking; compare logits for identical q/k/v weights by
+    # copying all weights whose shapes match and padding o with zeros.
+    def match(pp, p):
+        out = {}
+        for k, v in pp.items():
+            if isinstance(v, dict):
+                out[k] = match(v, p[k])
+            elif v.shape == p[k].shape:
+                out[k] = p[k]
+            else:  # o-proj (..., hp*dh, d) vs (..., h*dh, d): zero-pad rows
+                pw = [(0, 0)] * v.ndim
+                pw[-2] = (0, v.shape[-2] - p[k].shape[-2])
+                out[k] = jnp.pad(p[k], pw)
+        return out
+
+    params_pad = match(params_pad, params)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0,
+                              cfg.vocab_size)
+    from repro.models import forward
+    l1, _ = forward(params, {"tokens": toks}, cfg)
+    l2, _ = forward(params_pad, {"tokens": toks}, cfg_pad)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=2e-2)

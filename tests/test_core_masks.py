@@ -1,0 +1,87 @@
+"""Property + unit tests for complementary mask generation and packing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CSLayout, make_routes, packed_bytes, pack_dense,
+                        routes_to_mask, unpack, validate_complementary)
+
+LAYOUTS = st.tuples(
+    st.sampled_from([2, 4, 8, 16]),          # n
+    st.integers(1, 8),                        # partitions
+    st.integers(1, 8),                        # groups
+    st.sampled_from(["random", "cyclic"]),
+    st.integers(0, 2 ** 31 - 1),              # seed
+)
+
+
+@given(LAYOUTS)
+@settings(max_examples=60, deadline=None)
+def test_routes_are_complementary(args):
+    n, p, g, kind, seed = args
+    lay = CSLayout(p * n, g * n, n, kind)
+    route = make_routes(lay, seed)
+    validate_complementary(lay, route)  # permutation per (g, p)
+
+
+@given(LAYOUTS)
+@settings(max_examples=40, deadline=None)
+def test_mask_density_and_overlay(args):
+    """The paper's core structural claim: N sparse structures with density
+    1/N tile the dense structure exactly (no collisions, no gaps)."""
+    n, p, g, kind, seed = args
+    lay = CSLayout(p * n, g * n, n, kind)
+    mask = routes_to_mask(lay, make_routes(lay, seed))
+    # each output column has exactly P = d_in/N non-zeros -> density 1/N
+    assert (mask.sum(axis=0) == lay.partitions).all()
+    # within each group, every input position is owned exactly once
+    for gi in range(lay.groups):
+        cols = mask[:, gi * n:(gi + 1) * n]
+        assert (cols.sum(axis=1) == 1).all()
+
+
+@given(LAYOUTS)
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(args):
+    n, p, g, kind, seed = args
+    lay = CSLayout(p * n, g * n, n, kind)
+    route = make_routes(lay, seed)
+    rng = np.random.default_rng(seed % 1000)
+    w = rng.normal(size=(lay.d_in, lay.d_out)).astype(np.float32)
+    w = w * routes_to_mask(lay, route)
+    packed = pack_dense(lay, w, route)
+    assert packed.shape == (lay.groups, lay.partitions, n)
+    np.testing.assert_array_equal(unpack(lay, packed, route), w)
+
+
+def test_bad_route_rejected():
+    lay = CSLayout(8, 8, 4)
+    route = make_routes(lay, 0).copy()
+    route[0, 0, 0] = route[0, 0, 1]  # introduce a collision
+    with pytest.raises(ValueError, match="collide"):
+        validate_complementary(lay, route)
+
+
+def test_layout_validation():
+    with pytest.raises(ValueError):
+        CSLayout(10, 8, 4)  # d_in not divisible
+    with pytest.raises(ValueError):
+        CSLayout(8, 10, 4)  # d_out not divisible
+
+
+def test_compression_accounting():
+    lay = CSLayout(1600, 1500 + 4, 4)  # GSC-like linear, padded
+    acct = packed_bytes(lay)
+    # N-fold weight compression, modest route overhead
+    assert acct["packed_weight_bytes"] * 4 == acct["dense_bytes"]
+    assert 2.5 < acct["compression_random"] < 4.0
+    # cyclic routes cost 1 byte per N^2 weights -> closer to the ideal N
+    assert acct["compression_random"] < acct["compression_cyclic"] <= 4.0
+
+
+def test_cyclic_routes_are_shifts():
+    lay = CSLayout(32, 16, 4, "cyclic")
+    route = make_routes(lay, 7).astype(np.int64)
+    diffs = (route - route[..., :1]) % 4
+    np.testing.assert_array_equal(diffs, np.broadcast_to(np.arange(4), route.shape))

@@ -1,0 +1,152 @@
+"""Per-kernel validation: interpret=True Pallas execution vs ref.py oracles,
+swept over shapes, dtypes, pack factors and block configurations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CSLayout, kwta, make_routes, pack_dense, routes_to_mask
+from repro.kernels import (grouped_cs_matmul, grouped_cs_matmul_op,
+                           kwta_hist_op, kwta_hist_pallas, packed_matmul,
+                           packed_matmul_op, permute_activations,
+                           to_partition_major, topk_gather_matmul,
+                           topk_gather_op, topk_support)
+from repro.kernels import ref as R
+
+
+def make_case(d_in, d_out, n, seed=0, dtype=np.float32):
+    lay = CSLayout(d_in, d_out, n)
+    route = make_routes(lay, seed)
+    rng = np.random.default_rng(seed + 1)
+    w = rng.normal(size=(d_in, d_out)).astype(dtype)
+    w = w * routes_to_mask(lay, route).astype(dtype)
+    packed = pack_dense(lay, w, route)
+    return jnp.asarray(w), jnp.asarray(packed), jnp.asarray(route)
+
+
+SWEEP = [
+    # (B, d_in, d_out, n, dtype, blocks)
+    (8, 64, 64, 2, jnp.float32, (8, 8, 8)),
+    (16, 128, 64, 4, jnp.float32, (8, 16, 16)),
+    (16, 256, 256, 4, jnp.bfloat16, (8, 32, 32)),
+    (32, 256, 128, 8, jnp.float32, (16, 16, 16)),
+    (8, 512, 256, 16, jnp.bfloat16, (8, 16, 8)),
+]
+
+
+@pytest.mark.parametrize("b,d_in,d_out,n,dtype,blocks", SWEEP)
+def test_packed_matmul_kernel(b, d_in, d_out, n, dtype, blocks):
+    w, packed, route = make_case(d_in, d_out, n)
+    packed = packed.astype(dtype)
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, d_in), dtype)
+    pr, rr = to_partition_major(packed, route)
+    bb, bp, bg = blocks
+    y = packed_matmul(x, pr, rr, block_b=bb, block_p=bp, block_g=bg,
+                      interpret=True)
+    y_ref = R.ref_packed_matmul(x, packed, route)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,d_in,d_out,n,dtype,blocks", SWEEP)
+def test_grouped_kernel(b, d_in, d_out, n, dtype, blocks):
+    route_s = make_routes(CSLayout(d_in, n, n), seed=4)  # shared (1, P, N)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, d_in), dtype)
+    xg = permute_activations(x, route_s)
+    pk = jax.random.normal(jax.random.PRNGKey(2), (n, d_in // n, d_out // n),
+                           dtype)
+    bb, bp, bg = blocks
+    y = grouped_cs_matmul(xg, pk, block_b=bb, block_p=bp, block_g=bg,
+                          interpret=True)
+    y_ref = R.ref_grouped_cs_matmul(xg, pk)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,d_in,d_out,n,k", [
+    (1, 64, 64, 2, 8),
+    (4, 128, 64, 4, 16),
+    (8, 256, 128, 8, 16),
+    (2, 256, 256, 4, 64),
+])
+def test_topk_gather_kernel(b, d_in, d_out, n, k):
+    w, packed, route = make_case(d_in, d_out, n, seed=7)
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, d_in))
+    xs = kwta(x, k)
+    vals, pidx, soff = topk_support(xs, k, n)
+    pr, rr = to_partition_major(packed, route)
+    y = topk_gather_matmul(vals, pidx, soff, pr, rr, interpret=True)
+    y_ref = R.ref_topk_gather(vals, pidx, soff, pr, rr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    # and both equal the dense-masked matmul on the k-sparse input
+    np.testing.assert_allclose(np.asarray(y), np.asarray(xs @ w), atol=1e-4)
+
+
+@pytest.mark.parametrize("b,d,k,block_b", [
+    (4, 256, 16, 4), (8, 512, 50, 8), (16, 1500, 180, 8), (2, 128, 1, 2),
+])
+def test_kwta_hist_kernel(b, d, k, block_b):
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, d))
+    y = kwta_hist_pallas(x, k, block_b=block_b, interpret=True)
+    y_ref = R.ref_kwta_hist(x, k)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    nz = np.asarray((y != 0).sum(-1))
+    assert (nz >= k).all()
+
+
+def test_kwta_hist_gsc_shape():
+    """The paper's running example: 1500-element activation, 85% sparsity
+    (Fig. 10: K = 225)."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 1500))
+    y = kwta_hist_pallas(x, 225, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(R.ref_kwta_hist(x, 225)))
+
+
+def test_packed_matmul_op_grads():
+    w, packed, route = make_case(128, 64, 4, seed=9)
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 128))
+
+    def f(p, x):
+        return jnp.sum(packed_matmul_op(x, p, route, True) ** 2)
+
+    gp, gx = jax.grad(f, argnums=(0, 1))(packed, x)
+    gw, gx_ref = jax.grad(lambda wd, x: jnp.sum((x @ wd) ** 2),
+                          argnums=(0, 1))(w, x)
+    lay = CSLayout(128, 64, 4)
+    gp_ref = pack_dense(lay, np.asarray(gw), np.asarray(route))
+    np.testing.assert_allclose(np.asarray(gp), gp_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_grouped_op_grads():
+    n, b, p, g = 4, 8, 32, 16
+    xg = jax.random.normal(jax.random.PRNGKey(7), (n, b, p))
+    pk = jax.random.normal(jax.random.PRNGKey(8), (n, p, g))
+
+    def f(pk):
+        return jnp.sum(grouped_cs_matmul_op(xg, pk, True) ** 2)
+
+    gp = jax.grad(f)(pk)
+    gp_ref = jax.grad(lambda pk: jnp.sum(
+        jnp.einsum("nbp,npg->nbg", xg, pk) ** 2))(pk)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gp_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_topk_gather_op_end_to_end():
+    w, packed, route = make_case(256, 128, 4, seed=11)
+    x = kwta(jax.random.normal(jax.random.PRNGKey(9), (4, 256)), 32)
+    y = topk_gather_op(x, packed, route, 32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-4)
+
+
+def test_kwta_hist_op_grad_straight_through():
+    x = jnp.asarray([[0.9, 0.1, 0.5, 0.2, 0.8, 0.05, 0.3, 0.6]])
+    g = jax.grad(lambda x: jnp.sum(kwta_hist_op(x, 3, True)))(x)
+    y = kwta_hist_op(x, 3, True)
+    np.testing.assert_array_equal(np.asarray(g != 0), np.asarray(y != 0))

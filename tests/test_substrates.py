@@ -1,0 +1,235 @@
+"""Substrate tests: data determinism, checkpoint atomicity/resharding,
+optimizer correctness, gradient compression, monitor behavior."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data import gsc_batch, lm_batch
+from repro.optim import (AdamWConfig, apply_updates, dequantize_int8,
+                         global_norm, init_state, quantize_int8,
+                         warmup_cosine)
+from repro.runtime import LossGuard, StepMonitor, bubble_fraction
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    a = lm_batch(seed=7, step=42, batch=8, seq=32, vocab=1000)
+    b = lm_batch(seed=7, step=42, batch=8, seq=32, vocab=1000)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = lm_batch(seed=7, step=43, batch=8, seq=32, vocab=1000)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_shards_disjoint():
+    full = lm_batch(seed=1, step=5, batch=8, seq=16, vocab=100)
+    s0 = lm_batch(seed=1, step=5, batch=8, seq=16, vocab=100, shard=0,
+                  n_shards=2)
+    s1 = lm_batch(seed=1, step=5, batch=8, seq=16, vocab=100, shard=1,
+                  n_shards=2)
+    np.testing.assert_array_equal(
+        np.concatenate([s0["tokens"], s1["tokens"]]), full["tokens"])
+
+
+def test_data_has_learnable_structure():
+    b = lm_batch(seed=0, step=0, batch=64, seq=128, vocab=512)
+    t = b["tokens"]
+    linked = (np.roll(t, 1, axis=1) * 31 + 7) % 512
+    frac = (t == linked).mean()
+    assert 0.15 < frac < 0.4  # the 25% bigram dependency is present
+
+
+def test_gsc_data_class_structure():
+    b = gsc_batch(seed=0, step=0, batch=32)
+    assert b["x"].shape == (32, 32, 32, 1)
+    assert set(np.unique(b["y"])) <= set(range(12))
+    # class pattern rows carry extra energy
+    c = int(b["y"][0])
+    f1 = (3 * c + 2) % 32
+    assert b["x"][0, f1].mean() > b["x"][0].mean()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int8)},
+            "step": jnp.asarray(3)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    ckpt.save(d, 10, tree, extra={"note": "x"})
+    step, restored, extra = ckpt.restore_latest(d, tree)
+    assert step == 10 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_ignores_uncommitted(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 5, _tree())
+    # simulate a crash mid-write: a tmp dir without the .done marker
+    os.makedirs(os.path.join(d, "step_00000009"))
+    assert ckpt.latest_step(d) == 5
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    path = ckpt.save(d, 3, tree)
+    shard = os.path.join(path, "shard_p0.npz")
+    data = dict(np.load(shard))
+    data["leaf_00000"] = data["leaf_00000"] + 1.0  # corrupt
+    np.savez(shard, **data)
+    with pytest.raises(IOError, match="checksum"):
+        ckpt.restore(d, 3, tree)
+
+
+def test_checkpoint_prune(tmp_path):
+    d = str(tmp_path)
+    for s in [1, 2, 3, 4, 5]:
+        ckpt.save(d, s, _tree())
+    ckpt.prune(d, keep=2)
+    assert ckpt.list_steps(d) == [4, 5]
+
+
+def test_checkpoint_reshard_restore(tmp_path):
+    """Save under one mesh sharding, restore under another (elastic)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    d = str(tmp_path)
+    mesh1 = make_mesh((1, 1), ("data", "model"))
+    x = jnp.arange(64.0).reshape(8, 8)
+    tree = {"w": jax.device_put(x, NamedSharding(mesh1, P("data", None)))}
+    ckpt.save(d, 1, tree)
+    # restore onto a different PartitionSpec
+    sh2 = {"w": NamedSharding(mesh1, P(None, "model"))}
+    _, restored, _ = ckpt.restore_latest(d, tree, sh2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))
+    assert restored["w"].sharding.spec == P(None, "model")
+
+
+def test_checkpoint_async(tmp_path):
+    d = str(tmp_path)
+    t = ckpt.save_async(d, 7, _tree())
+    t.join(timeout=10)
+    assert ckpt.latest_step(d) == 7
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0]), "route": jnp.zeros((2,), jnp.int8)}
+    cfg = AdamWConfig(lr=0.2, weight_decay=0.0, grad_clip=100.0)
+    state = init_state(params, cfg)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2), allow_int=True)(params)
+        params, state, _ = apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+    # int leaves untouched
+    np.testing.assert_array_equal(np.asarray(params["route"]),
+                                  np.zeros(2, np.int8))
+
+
+def test_adamw_bf16_moments_close_to_fp32():
+    def run(moment_dtype):
+        params = {"w": jnp.full((4,), 2.0)}
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, moment_dtype=moment_dtype)
+        state = init_state(params, cfg)
+        for _ in range(50):
+            grads = {"w": params["w"] * 2.0}
+            params, state, _ = apply_updates(params, grads, state, cfg)
+        return np.asarray(params["w"])
+
+    np.testing.assert_allclose(run(jnp.bfloat16), run(jnp.float32),
+                               atol=0.05)
+
+
+def test_grad_clip_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    from repro.optim import clip_by_global_norm
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 30
+
+
+def test_warmup_cosine_shape():
+    vals = [float(warmup_cosine(jnp.asarray(s), 10, 100)) for s in range(100)]
+    assert vals[0] < 0.2
+    assert abs(vals[10] - 1.0) < 0.1
+    assert vals[99] < 0.5
+    assert max(vals) <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_int8_quant_roundtrip_error():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256,)) * 3)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.51
+
+
+def test_error_feedback_unbiased_accumulation():
+    """Over many steps, EF-compressed sums track the true sums (the
+    residual guarantees no systematic bias)."""
+    rng = np.random.default_rng(1)
+    resid = jnp.zeros((64,))
+    total_true = np.zeros(64)
+    total_sent = np.zeros(64)
+    for step in range(100):
+        g = jnp.asarray(rng.normal(size=64) * 0.01)
+        comp_in = g + resid
+        q, s = quantize_int8(comp_in)
+        sent = dequantize_int8(q, s)
+        resid = comp_in - sent
+        total_true += np.asarray(g)
+        total_sent += np.asarray(sent)
+    # residual bounds the accumulated divergence
+    assert np.abs(total_true - total_sent).max() <= float(np.abs(np.asarray(resid)).max()) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# monitor
+# ---------------------------------------------------------------------------
+
+def test_step_monitor_flags_stragglers():
+    m = StepMonitor(straggler_factor=2.0, warmup_steps=2, trip_after=3)
+    for i in range(10):
+        m.record(i, 0.1)
+    assert not m.should_reshard
+    evs = [m.record(10 + i, 1.0) for i in range(3)]
+    assert all(e.flagged for e in evs)
+    assert m.should_reshard
+    assert m.summary()["flagged"] == 3
+
+
+def test_loss_guard():
+    g = LossGuard(spike_factor=5.0)
+    assert g.check(2.0)
+    assert g.check(1.9)
+    assert not g.check(float("nan"))
+    assert not g.check(100.0)
+    assert g.check(1.8)
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 12) == pytest.approx(3 / 15)
+    assert bubble_fraction(1, 8) == 0.0
