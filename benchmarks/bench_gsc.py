@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import gsc_cnn as G
+from repro.launch.hlo import compiled_flops
 
 
 def _compiled_flops(cfg, batch):
@@ -31,7 +32,7 @@ def _compiled_flops(cfg, batch):
     params, _ = G.init_model(jax.random.PRNGKey(0), cfg)
     fn = jax.jit(lambda p, x: G.forward(p, x, cfg))
     compiled = fn.lower(params, x).compile()
-    return compiled.cost_analysis()["flops"], fn, params
+    return compiled_flops(compiled), fn, params
 
 
 def _throughput(fn, params, batch, iters=20):

@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import kwta, kwta_bisect, kwta_hist
+from repro.launch.hlo import compiled_flops, cost_analysis_dict
 
 
 def _cost(fn, x):
-    c = jax.jit(fn).lower(x).compile().cost_analysis()
+    c = cost_analysis_dict(jax.jit(fn).lower(x).compile())
     f = jax.jit(fn)
     f(x).block_until_ready()
     t0 = time.perf_counter()
@@ -39,9 +40,7 @@ def run(report):
     # Fig 20: k-WTA vs the conv it feeds (1x1 [64:64] dense equivalent)
     w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
     xc = jax.random.normal(jax.random.PRNGKey(2), (64, 100, 64))
-    conv_flops = jax.jit(lambda x: x @ w).lower(xc).compile(
-    ).cost_analysis()["flops"]
-    kw_flops = jax.jit(lambda x: kwta(x, 8)).lower(xc).compile(
-    ).cost_analysis()["flops"]
+    conv_flops = compiled_flops(jax.jit(lambda x: x @ w).lower(xc).compile())
+    kw_flops = compiled_flops(jax.jit(lambda x: kwta(x, 8)).lower(xc).compile())
     report("fig20_kwta_vs_conv", 0.0, {
         "kwta_fraction_of_conv": round(kw_flops / conv_flops, 3)})

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core.api import SparsityConfig
 from repro.core.layers import packed_conv2d_apply, packed_conv2d_init
 from repro.core.kwta import kwta
+from repro.launch.hlo import cost_analysis_dict
 
 
 def _analyze(kh, kw, n, k, spatial=10, batch=8):
@@ -30,7 +31,7 @@ def _analyze(kh, kw, n, k, spatial=10, batch=8):
 
     x = jax.ShapeDtypeStruct((batch, spatial, spatial, 64), jnp.float32)
     compiled = jax.jit(fn).lower(params, x).compile()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     pbytes = sum(v.size * v.dtype.itemsize
                  for v in jax.tree.leaves(params))
     return ca["flops"], ca["bytes accessed"], pbytes

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import (CSLayout, cs_matmul, cs_matmul_dense, cs_topk_matmul,
                         kwta, make_routes, pack_dense, routes_to_mask)
+from repro.launch.hlo import compiled_flops
 
 
 def _time(fn, *args, iters=10):
@@ -31,7 +32,7 @@ def _time(fn, *args, iters=10):
 
 
 def _flops(fn, *args):
-    return jax.jit(fn).lower(*args).compile().cost_analysis()["flops"]
+    return compiled_flops(jax.jit(fn).lower(*args).compile())
 
 
 def run(report):

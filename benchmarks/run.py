@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
   bench_sparse_matmul — Figure 6 (structured-sparsity matmul paths)
   bench_resources     — Figures 15-18 (conv-block resource scaling)
   bench_kwta          — Figures 19-20 (k-WTA cost scaling)
+  bench_serve         — serving: continuous batching vs static, TTFT
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only gsc,...]
 """
@@ -26,12 +27,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: gsc,sparse_matmul,"
-                         "resources,kwta")
+                         "resources,kwta,serve")
     args = ap.parse_args()
     from benchmarks import bench_gsc, bench_kwta, bench_resources, \
-        bench_sparse_matmul
+        bench_serve, bench_sparse_matmul
     mods = {"gsc": bench_gsc, "sparse_matmul": bench_sparse_matmul,
-            "resources": bench_resources, "kwta": bench_kwta}
+            "resources": bench_resources, "kwta": bench_kwta,
+            "serve": bench_serve}
     sel = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")
     failed = []

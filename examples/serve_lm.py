@@ -1,7 +1,9 @@
-"""Serve a (reduced) assigned-architecture LM with batched requests and a
-KV cache — the decode path that the sparse-sparse topk dispatch targets.
+"""Serve a (reduced) assigned-architecture LM with the continuous-batching
+engine: fused one-call prefill, slot-based KV cache, mid-flight admission,
+greedy or temperature/top-k sampling — the decode path the sparse-sparse
+topk dispatch targets.
 
-Run: PYTHONPATH=src python examples/serve_lm.py --arch yi-6b
+Run: PYTHONPATH=src python examples/serve_lm.py --arch smollm-360m
 """
 
 import argparse
@@ -10,20 +12,35 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_mesh
-from repro.launch.serve import Server
+from repro.launch.serve import Engine
+from repro.runtime.scheduler import Request, SamplingParams
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
     cfg = get_config(args.arch).reduced()
     mesh = make_mesh((1, 1), ("data", "model"))
-    server = Server(cfg, mesh, max_seq=64)
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, 8)).astype(np.int32)
-    out = server.generate(prompts, args.gen)
-    print(f"arch={cfg.name} generated {out.shape}:")
-    for row in out[:2]:
-        print(" ", row.tolist())
+    engine = Engine(cfg, mesh, max_seq=64, n_slots=args.slots)
+    rng = np.random.default_rng(0)
+    # mixed prompt lengths + budgets: the case continuous batching wins
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        8 + 4 * (i % 3)).tolist(),
+                    max_new_tokens=max(1, args.gen - 4 * (i % 3)),
+                    sampling=SamplingParams(temperature=args.temperature,
+                                            top_k=args.top_k, seed=i))
+            for i in range(args.requests)]
+    out, stats = engine.serve(reqs)
+    print(f"arch={cfg.name} served {len(out)} requests in "
+          f"{stats['wall_s']:.2f}s: {stats['tok_s']:.1f} tok/s, "
+          f"{stats['decode_steps']} decode steps, "
+          f"{stats['prefill_calls']} prefill calls (1 per prompt)")
+    for uid in sorted(out)[:2]:
+        print(f"  req {uid} ({len(out[uid])} toks, "
+              f"ttft {stats['ttft_s'][uid]*1e3:.0f}ms):", out[uid][:12])

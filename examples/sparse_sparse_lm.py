@@ -33,7 +33,8 @@ def run(tag, sparsity, steps):
     opt = init_state(params, acfg)
     jitted = jax.jit(train_step)
     b0 = {k: jnp.asarray(v) for k, v in batch_for(cfg, _Shape, 0).items()}
-    flops = jitted.lower(params, opt, b0).compile().cost_analysis()["flops"]
+    from repro.launch.hlo import compiled_flops
+    flops = compiled_flops(jitted.lower(params, opt, b0).compile())
     for s in range(steps):
         batch = {k: jnp.asarray(v)
                  for k, v in batch_for(cfg, _Shape, s).items()}

@@ -36,7 +36,8 @@ import numpy as np
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.launch import steps as St
-from repro.launch.hlo import collective_bytes, count_hlo_ops
+from repro.launch.hlo import (collective_bytes, cost_analysis_dict,
+                              count_hlo_ops)
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as T
 from repro.models.common import dtype_of
@@ -82,7 +83,7 @@ def _mem_dict(ma) -> Dict[str, float]:
     }
 
 
-def _cost_dict(ca) -> Dict[str, float]:
+def _cost_dict(ca: Dict[str, float]) -> Dict[str, float]:
     if not ca:
         return {}
     return {"flops": float(ca.get("flops", 0.0)),
@@ -94,7 +95,7 @@ def _analyze(compiled) -> Dict[str, Any]:
     txt = compiled.as_text()
     return {
         "memory": _mem_dict(compiled.memory_analysis()),
-        "cost": _cost_dict(compiled.cost_analysis()),
+        "cost": _cost_dict(cost_analysis_dict(compiled)),
         "collectives": collective_bytes(txt),
         "hlo_ops": count_hlo_ops(txt),
     }

@@ -18,6 +18,24 @@ from __future__ import annotations
 import re
 from typing import Dict
 
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to a flat dict.
+
+    JAX has flip-flopped on the return shape (a dict on new versions, a
+    one-element list of dicts on 0.4.x); every caller in this repo goes
+    through here so benchmarks and tests are version-tolerant."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def compiled_flops(compiled) -> float:
+    """Total compiled FLOPs of a ``jax.stages.Compiled`` (0.0 when the
+    backend reports none)."""
+    return float(cost_analysis_dict(compiled).get("flops", 0.0))
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,

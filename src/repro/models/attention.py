@@ -143,8 +143,10 @@ def _flash_attn(q, k, v, scale, block: int, unroll: bool = False):
     return out.swapaxes(1, 2).astype(q.dtype)  # (B, S, H, Dh)
 
 
-def gqa_apply(params, x, cfg, positions):
-    """Training/prefill forward (full causal self-attention)."""
+def _gqa_forward(params, x, cfg, positions):
+    """Full causal self-attention. Returns (y, k_rows, v_rows) where
+    k_rows/v_rows are the roped true-head K/V — exactly what the decode
+    cache stores per position (the fused-prefill bulk write)."""
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     hp = cfg.padded_heads
     sp = cfg.proj_sparsity
@@ -153,6 +155,7 @@ def gqa_apply(params, x, cfg, positions):
     v = _split_heads(_proj_apply(params["v"], x, sp), hkv, dh)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    k_rows, v_rows = k, v
     k = _repeat_kv(k, h // hkv)
     v = _repeat_kv(v, h // hkv)
     q, k, v = (_pad_heads(t, hp) for t in (q, k, v))
@@ -167,7 +170,43 @@ def gqa_apply(params, x, cfg, positions):
         out = _causal_attn(q, k, v, scale)
     out = constrain(out, "batch", "seq", "heads", None)
     out = _mask_dummy_heads(out, cfg)
-    return _proj_apply(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
+    y = _proj_apply(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
+    return y, k_rows, v_rows
+
+
+def gqa_apply(params, x, cfg, positions):
+    """Training/prefill forward (full causal self-attention)."""
+    return _gqa_forward(params, x, cfg, positions)[0]
+
+
+def _pad_seq(x, max_seq: int):
+    """Zero-pad the sequence axis (1) out to ``max_seq``."""
+    s = x.shape[1]
+    if s >= max_seq:
+        return x[:, :max_seq]
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, max_seq - s)
+    return jnp.pad(x, pad)
+
+
+def gqa_prefill(params, x, cfg, positions, max_seq: int):
+    """Fused full-sequence prefill: one forward over the whole prompt that
+    also emits the decode cache in bulk (rows [0, S) written at once).
+    Rows >= S are scratch — zeros here, but pad-token K/V when the caller
+    bucket-pads the prompt — and are only safe because decode overwrites
+    row ``pos`` before its validity mask ever reads it; no consumer may
+    assume they are meaningful (or zero).
+    Returns (y, cache) with the same cache pytree as gqa_cache_init."""
+    y, k, v = _gqa_forward(params, x, cfg, positions)
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        kq, ks = _quant_rows(k)
+        vq, vs = _quant_rows(v)
+        cache = {"k": _pad_seq(kq, max_seq), "v": _pad_seq(vq, max_seq),
+                 "k_scale": _pad_seq(ks, max_seq),
+                 "v_scale": _pad_seq(vs, max_seq)}
+    else:
+        cache = {"k": _pad_seq(k, max_seq), "v": _pad_seq(v, max_seq)}
+    return y, cache
 
 
 def gqa_cache_init(cfg, batch: int, max_seq: int, dtype):
@@ -198,6 +237,10 @@ def _quant_rows(x):
 def _cache_write(cache, new, pos, mode: str = None):
     """Write one position into a (B, S, ...) cache.
 
+    ``pos`` may be a scalar (all rows at the same position — the static
+    batch) or a (B,) vector of per-row positions (continuous batching:
+    every slot decodes at its own depth).
+
     ``dynamic_update_slice`` at a traced index on the sequence axis defeats
     GSPMD when the cache is sequence-sharded (SP): it all-gathers the whole
     cache (measured: 34 GB/step collectives on yi-6b decode_32k).
@@ -208,13 +251,19 @@ def _cache_write(cache, new, pos, mode: str = None):
       owner  — shard_map row-owner write (§Perf hillclimb A rung 3): only
                the shard owning position ``pos`` runs a local
                dynamic_update_slice; other shards pass through untouched.
+               Scalar ``pos`` only; vector positions fall back to masked.
     """
     mode = mode or "masked"
+    pos = jnp.asarray(pos, jnp.int32)
+    s = cache.shape[1]
+    if pos.ndim == 1:  # per-slot positions: (B, S) one-hot masked write
+        hot = jnp.arange(s)[None, :] == pos[:, None]
+        hot = hot.reshape(hot.shape + (1,) * (cache.ndim - 2))
+        return jnp.where(hot, new.astype(cache.dtype), cache)
     if mode == "owner":
         owner = _owner_write(cache, new, pos)
         if owner is not None:
             return owner
-    s = cache.shape[1]
     hot = (jnp.arange(s) == pos)
     shape = [1, s] + [1] * (cache.ndim - 2)
     hot = hot.reshape(shape)
@@ -259,7 +308,8 @@ def _owner_write(cache, new, pos):
 
         return lax.cond(in_range, write, lambda c: c, c)
 
-    return jax.shard_map(
+    from repro.sharding.context import shard_map
+    return shard_map(
         local, mesh=mesh, in_specs=(cache_spec, new_spec, P()),
         out_specs=cache_spec, check_vma=False,
     )(cache, new, pos if hasattr(pos, "dtype") else jnp.int32(pos))
@@ -275,7 +325,9 @@ def gqa_cache_specs(cfg=None):
 
 
 def gqa_decode(params, x, cfg, cache, pos):
-    """One-token decode step. x: (B, 1, D); pos: scalar current position.
+    """One-token decode step. x: (B, 1, D); pos: scalar current position,
+    or a (B,) vector of per-row positions (continuous batching — each slot
+    sits at its own depth in the cache).
 
     The new K/V row is scattered into the cache at ``pos``; attention reads
     the full cache with a validity mask (positions > pos are masked).  With
@@ -284,7 +336,8 @@ def gqa_decode(params, x, cfg, cache, pos):
     """
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     sp = cfg.proj_sparsity
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    positions = pos_b[:, None]
     q = _split_heads(_proj_apply(params["q"], x, sp), h, dh)
     k = _split_heads(_proj_apply(params["k"], x, sp), hkv, dh)
     v = _split_heads(_proj_apply(params["v"], x, sp), hkv, dh)
@@ -311,8 +364,8 @@ def gqa_decode(params, x, cfg, cache, pos):
     vf = _pad_heads(_repeat_kv(v_cache, h // hkv), hp)
     scale = 1.0 / np.sqrt(dh)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
-    valid = jnp.arange(kf.shape[1]) <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    valid = jnp.arange(kf.shape[1])[None, :] <= pos_b[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
     out = _mask_dummy_heads(out, cfg)
@@ -361,7 +414,9 @@ def _mla_expand(params, c_kv, cfg, ct):
     return k_nope, v
 
 
-def mla_apply(params, x, cfg, positions):
+def _mla_forward(params, x, cfg, positions):
+    """Full causal MLA forward. Returns (y, c_kv, k_pe) — the latent rows
+    the decode cache stores (fused-prefill bulk write)."""
     h, dh, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
     q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
     k_nope, v = _mla_expand(params, c_kv, cfg, x.dtype)
@@ -375,7 +430,12 @@ def mla_apply(params, x, cfg, positions):
                           unroll=cfg.unroll_inner)
     else:
         out = _causal_attn(q, k, v, scale)
-    return out.reshape(*x.shape[:-1], h * dh) @ params["o"].astype(x.dtype)
+    y = out.reshape(*x.shape[:-1], h * dh) @ params["o"].astype(x.dtype)
+    return y, c_kv, k_pe
+
+
+def mla_apply(params, x, cfg, positions):
+    return _mla_forward(params, x, cfg, positions)[0]
 
 
 def mla_cache_init(cfg, batch: int, max_seq: int, dtype):
@@ -389,9 +449,17 @@ def mla_cache_specs():
     return {"ckv": ("batch", "kvseq", None), "kpe": ("batch", "kvseq", None)}
 
 
+def mla_prefill(params, x, cfg, positions, max_seq: int):
+    """Fused full-sequence MLA prefill: forward + bulk latent-cache write
+    (same contract as :func:`gqa_prefill`)."""
+    y, c_kv, k_pe = _mla_forward(params, x, cfg, positions)
+    return y, {"ckv": _pad_seq(c_kv, max_seq), "kpe": _pad_seq(k_pe, max_seq)}
+
+
 def mla_decode(params, x, cfg, cache, pos):
     h, dh, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    positions = pos_b[:, None]
     q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
     ckv_c = _cache_write(cache["ckv"], c_kv, pos, cfg.cache_write)
     kpe_c = _cache_write(cache["kpe"], k_pe, pos, cfg.cache_write)
@@ -403,8 +471,8 @@ def mla_decode(params, x, cfg, cache, pos):
                         axis=-1)
     scale = 1.0 / np.sqrt(dh + dr)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
-    valid = jnp.arange(k.shape[1]) <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    valid = jnp.arange(k.shape[1])[None, :] <= pos_b[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
     y = out.reshape(*x.shape[:-1], h * dh) @ params["o"].astype(x.dtype)

@@ -273,10 +273,74 @@ def init_cache(cfg, batch: int, max_seq: int):
     return cache, specs
 
 
+def supports_fused_prefill(cfg) -> bool:
+    """Fused bulk-cache prefill exists for attention blocks; SSM/hybrid
+    patterns fall back to stepwise prefill (their decode state is the
+    *final* recurrence state, not per-position rows)."""
+    return all(k in ("attn", "shared_attn") for k in cfg.block_pattern)
+
+
+def _block_prefill(kind: str, params, x, cfg, positions, max_seq: int):
+    """Full-sequence forward that also emits the block's decode cache in
+    bulk. Returns (x, cache)."""
+    if kind not in ("attn", "shared_attn"):
+        raise NotImplementedError(
+            f"fused prefill not implemented for block kind {kind!r}; "
+            "use the stepwise prefill path")
+    h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    pre = A.mla_prefill if cfg.use_mla else A.gqa_prefill
+    h, cache = pre(params["mixer"], h, cfg, positions, max_seq)
+    x = x + h
+    h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+    if "moe" in params:
+        h, _ = moe_apply(params["moe"], h, cfg, cfg.ffn_sparsity)
+        x = x + h
+    elif "ffn" in params:
+        x = x + ffn_apply(params["ffn"], h, cfg.ffn_sparsity, cfg.act)
+    return x, cache
+
+
+def prefill(params, batch, cfg, max_seq: int):
+    """Fused full-sequence prefill: ONE compiled call per prompt.
+
+    Runs the full forward over the prompt (B, S) while writing every
+    block's KV cache in bulk — rows [0, S) of a cache padded to
+    ``max_seq`` (rows >= S are zeros and are overwritten by decode before
+    any read; the validity mask in the decode steps never looks past the
+    current position).  The cache pytree matches :func:`init_cache`
+    exactly (leaves stacked over n_units), so the serving engine can
+    insert it into a slot of the live batch cache and hand off to
+    :func:`serve_step`.
+
+    Returns (logits (B, S, vocab), cache).
+    """
+    ct = dtype_of(cfg.compute_dtype)
+    x, _ = _embed_inputs(params, batch, cfg, ct)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    shared = params.get("shared")
+
+    def unit_fn(x, unit_params):
+        caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
+            x, caches[f"b{i}"] = _block_prefill(kind, p, x, cfg, positions,
+                                                max_seq)
+        return x, caches
+
+    x, cache = lax.scan(unit_fn, x, params["units"])
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
+    logits = x @ table.astype(ct).T
+    return constrain(logits, "batch", "seq", "vocab"), cache
+
+
 def serve_step(params, cache, batch, pos, cfg):
-    """Decode one token at position ``pos`` given caches of past state.
+    """Decode one token given caches of past state.
 
     batch: {"tokens": (B, 1)} (or {"embeds": (B, 1, D)}).
+    pos: scalar position (static batch) or (B,) per-slot positions
+    (continuous batching).
     Returns (logits (B, vocab), new_cache).
     """
     ct = dtype_of(cfg.compute_dtype)

@@ -1,8 +1,11 @@
 """Runtime: fault tolerance, straggler detection, elastic restart, pipeline
-parallelism."""
+parallelism, continuous-batching scheduling."""
 
 from .monitor import LossGuard, StepEvent, StepMonitor
 from .pipeline_parallel import bubble_fraction, pipeline_apply
+from .scheduler import (Request, SamplingParams, Scheduler, Slot,
+                        sample_token)
 
 __all__ = ["LossGuard", "StepEvent", "StepMonitor", "bubble_fraction",
-           "pipeline_apply"]
+           "pipeline_apply", "Request", "SamplingParams", "Scheduler",
+           "Slot", "sample_token"]

@@ -1,0 +1,147 @@
+"""Continuous-batching scheduler: slot admission, retirement, sampling.
+
+The serving engine (repro/launch/serve.py) holds a fixed-size decode batch
+of ``n_slots`` KV-cache slots; this module owns the *policy* side — a FIFO
+queue of requests, which slot each admitted request occupies, per-slot
+position tracking, and when a slot retires (token budget or EOS).  It is
+pure Python + numpy (no jax), so policy is unit-testable without compiling
+a model.
+
+Sampling lives here too: greedy and temperature/top-k, applied on host to
+the per-slot logits row the engine hands over each step.  Per-request
+numpy Generators keep sampling deterministic per request regardless of
+which slot the request lands in or what else shares the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature == 0 -> greedy; top_k == 0 -> full-vocab sampling."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Slot:
+    """One row of the decode batch."""
+    index: int
+    request: Optional[Request] = None
+    pos: int = 0                    # next cache row to be written
+    generated: List[int] = dataclasses.field(default_factory=list)
+    rng: Optional[np.random.Generator] = None
+    admit_time: float = 0.0
+    first_token_time: float = 0.0
+
+    @property
+    def busy(self) -> bool:
+        return self.request is not None
+
+    @property
+    def done(self) -> bool:
+        r = self.request
+        if r is None:
+            return False
+        if self.generated and r.eos_id is not None \
+                and self.generated[-1] == r.eos_id:
+            return True
+        return len(self.generated) >= r.max_new_tokens
+
+
+def sample_token(logits: np.ndarray, params: SamplingParams,
+                 rng: Optional[np.random.Generator]) -> int:
+    """One token from a (vocab,) logits row."""
+    if params.temperature <= 0.0:
+        return int(np.argmax(logits))
+    logits = logits.astype(np.float64) / params.temperature
+    if params.top_k > 0 and params.top_k < logits.shape[-1]:
+        kth = np.partition(logits, -params.top_k)[-params.top_k]
+        logits = np.where(logits < kth, -np.inf, logits)
+    logits = logits - logits.max()
+    probs = np.exp(logits)
+    probs /= probs.sum()
+    return int(rng.choice(logits.shape[-1], p=probs))
+
+
+class Scheduler:
+    """FIFO admission into a fixed pool of decode slots."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
+        self.queue: Deque[Request] = deque()
+        self.finished: Dict[int, List[int]] = {}
+        self.ttft: Dict[int, float] = {}  # uid -> time of first token
+
+    # -- queue side ---------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def submit_many(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self.submit(r)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.busy for s in self.slots)
+
+    # -- slot side ----------------------------------------------------------
+    def free_slots(self) -> List[Slot]:
+        return [s for s in self.slots if not s.busy]
+
+    def active_slots(self) -> List[Slot]:
+        return [s for s in self.slots if s.busy]
+
+    def admit(self, now: float = 0.0) -> List[Slot]:
+        """Move queued requests into free slots (FIFO). Returns the slots
+        that were (re)filled this call; the engine prefills each one."""
+        admitted = []
+        for slot in self.slots:
+            if slot.busy or not self.queue:
+                continue
+            req = self.queue.popleft()
+            slot.request = req
+            slot.pos = len(req.prompt)
+            slot.generated = []
+            slot.rng = np.random.default_rng(req.sampling.seed)
+            slot.admit_time = now
+            slot.first_token_time = 0.0
+            admitted.append(slot)
+        return admitted
+
+    def record_token(self, slot: Slot, token: int, now: float = 0.0) -> None:
+        if not slot.generated:
+            slot.first_token_time = now
+            self.ttft[slot.request.uid] = now
+        slot.generated.append(token)
+
+    def retire_done(self) -> List[Slot]:
+        """Free every slot whose request finished; their outputs land in
+        ``finished`` keyed by request uid. Returns the retired slots (with
+        .request still attached for the caller's bookkeeping)."""
+        retired = []
+        for slot in self.slots:
+            if slot.busy and slot.done:
+                self.finished[slot.request.uid] = list(slot.generated)
+                retired.append(dataclasses.replace(slot))
+                slot.request = None
+                slot.rng = None
+        return retired

@@ -1,0 +1,38 @@
+"""Graceful fallback when ``hypothesis`` is not installed.
+
+The property-test modules import ``given/settings/st`` from here instead of
+from ``hypothesis`` directly, so collection never hard-errors on a bare
+environment (the seed suite died with 4 collection errors): with hypothesis
+present the real decorators are re-exported; without it every ``@given``
+test is skipped at run time while the plain unit tests in the same modules
+still run.  ``pip install -r requirements-dev.txt`` restores the full
+property suite.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare environments
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed "
+                                       "(see requirements-dev.txt)")
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: any strategy expression
+        (st.integers(1, 8), st.sampled_from([...]).map(f), ...) evaluates
+        without error; the tests using it are skipped anyway."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()

@@ -4,7 +4,7 @@ approximation bounds, locality, gradients (straight-through on winners)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (activation_sparsity, kwta, kwta_hist, kwta_local,
                         kwta_mask)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CSLayout, make_routes, packed_bytes, pack_dense,
                         routes_to_mask, unpack, validate_complementary)

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.data import gsc_batch
+from repro.launch.hlo import compiled_flops
 from repro.models import gsc_cnn as G
 from repro.optim import AdamWConfig, apply_updates, init_state
 
@@ -59,7 +60,7 @@ def test_flop_reduction_matches_paper_structure():
         x = jax.ShapeDtypeStruct((1, 32, 32, 1), jnp.float32)
         c = jax.jit(lambda p, x: G.forward(p, x, cfg)).lower(
             params, x).compile()
-        flops[v] = c.cost_analysis()["flops"]
+        flops[v] = compiled_flops(c)
     rd = flops["dense"] / flops["sparse_dense"]
     rs = flops["dense"] / flops["sparse_sparse"]
     assert rd > 4, f"sparse-dense reduction only {rd:.1f}x"

@@ -1,0 +1,219 @@
+"""Serving-engine tests: scheduler slot admission/retirement, sampling,
+fused-prefill correctness, and continuous-batching parity against the
+static-batch oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.launch.serve import Engine, _bucket
+from repro.models import transformer as T
+from repro.runtime.scheduler import (Request, SamplingParams, Scheduler,
+                                     sample_token)
+
+
+# ---------------------------------------------------------------------------
+# scheduler (pure policy, no jax)
+# ---------------------------------------------------------------------------
+
+def _req(uid, p_len=4, max_new=8, **kw):
+    return Request(uid=uid, prompt=list(range(p_len)),
+                   max_new_tokens=max_new, **kw)
+
+
+def test_scheduler_fifo_admission():
+    s = Scheduler(2)
+    s.submit_many([_req(0), _req(1), _req(2)])
+    admitted = s.admit()
+    assert [sl.request.uid for sl in admitted] == [0, 1]
+    assert [sl.index for sl in admitted] == [0, 1]
+    assert s.admit() == []           # no free slots
+    assert [r.uid for r in s.queue] == [2]
+    assert s.has_work
+
+
+def test_scheduler_positions_start_at_prompt_len():
+    s = Scheduler(1)
+    s.submit(_req(7, p_len=5))
+    (slot,) = s.admit()
+    assert slot.pos == 5 and slot.generated == []
+
+
+def test_scheduler_retire_frees_slot_and_readmits():
+    s = Scheduler(1)
+    s.submit_many([_req(0, max_new=2), _req(1, max_new=1)])
+    (slot,) = s.admit()
+    s.record_token(slot, 11)
+    assert not slot.done
+    s.record_token(slot, 12)
+    assert slot.done
+    retired = s.retire_done()
+    assert [r.request.uid for r in retired] == [0]
+    assert s.finished[0] == [11, 12]
+    assert not s.slots[0].busy
+    (slot2,) = s.admit()              # the queued request takes the slot
+    assert slot2.request.uid == 1 and slot2.index == 0
+    s.record_token(slot2, 3)
+    s.retire_done()
+    assert s.finished[1] == [3]
+    assert not s.has_work
+
+
+def test_scheduler_eos_retires_early():
+    s = Scheduler(1)
+    s.submit(_req(0, max_new=100, eos_id=42))
+    (slot,) = s.admit()
+    s.record_token(slot, 5)
+    s.record_token(slot, 42)
+    assert slot.done
+    s.retire_done()
+    assert s.finished[0] == [5, 42]
+
+
+def test_sampling_greedy_and_topk():
+    logits = np.asarray([0.0, 5.0, 1.0, 4.0])
+    assert sample_token(logits, SamplingParams(), None) == 1
+    rng = np.random.default_rng(0)
+    picks = {sample_token(logits, SamplingParams(temperature=1.0, top_k=2),
+                          rng) for _ in range(50)}
+    assert picks <= {1, 3}            # top-2 filter holds
+    assert len(picks) == 2            # and it actually samples
+    # per-request seeds are deterministic
+    a = [sample_token(logits, SamplingParams(temperature=0.7, seed=3),
+                      np.random.default_rng(3)) for _ in range(5)]
+    b = [sample_token(logits, SamplingParams(temperature=0.7, seed=3),
+                      np.random.default_rng(3)) for _ in range(5)]
+    assert a == b
+
+
+def test_bucket_is_pow2_and_capped():
+    assert _bucket(3, 64) == 8
+    assert _bucket(9, 64) == 16
+    assert _bucket(16, 64) == 16
+    assert _bucket(60, 32) == 32
+
+
+# ---------------------------------------------------------------------------
+# fused prefill == stepwise prefill (the tentpole's correctness claim)
+# ---------------------------------------------------------------------------
+
+def _cfg(**overrides):
+    base = dict(head_pad=0, compute_dtype="float32", param_dtype="float32")
+    base.update(overrides)
+    return get_config("smollm-360m").reduced(**base)
+
+
+def test_fused_prefill_matches_stepwise_cache():
+    cfg = _cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    b, p_len, max_seq = 2, 7, 24
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (b, p_len)).astype(np.int32)
+    logits_f, cache_f = jax.jit(
+        lambda p, t: T.prefill(p, {"tokens": t}, cfg, max_seq))(
+            params, jnp.asarray(toks))
+    cache_s, _ = T.init_cache(cfg, b, max_seq)
+    logits_s = None
+    for pos in range(p_len):
+        logits_s, cache_s = T.serve_step(
+            params, cache_s, {"tokens": jnp.asarray(toks[:, pos:pos + 1])},
+            pos, cfg)
+    np.testing.assert_allclose(np.asarray(logits_f[:, p_len - 1]),
+                               np.asarray(logits_s), atol=1e-4)
+    for lf, ls in zip(jax.tree.leaves(cache_f), jax.tree.leaves(cache_s)):
+        # only rows [0, p_len) are defined; later rows are scratch
+        np.testing.assert_allclose(
+            np.asarray(lf, np.float32)[:, :, :p_len],
+            np.asarray(ls, np.float32)[:, :, :p_len], atol=1e-4)
+
+
+def test_fused_prefill_rejects_ssm_patterns():
+    cfg = get_config("zamba2-1p2b")
+    assert not T.supports_fused_prefill(cfg)
+    assert T.supports_fused_prefill(_cfg())
+
+
+def test_decode_vector_positions_match_scalar():
+    """A (B,) position vector with equal entries must equal the scalar-pos
+    decode — the continuous-batching kernel contract."""
+    cfg = _cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    b, max_seq = 3, 16
+    cache, _ = T.init_cache(cfg, b, max_seq)
+    toks = np.random.default_rng(1).integers(0, cfg.vocab_size, (b, 1))
+    for pos in range(4):
+        batch = {"tokens": jnp.asarray(toks)}
+        l1, c1 = T.serve_step(params, cache, batch, pos, cfg)
+        l2, c2 = T.serve_step(params, cache, batch,
+                              jnp.full((b,), pos, jnp.int32), cfg)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+        for a, bb in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(bb, np.float32), atol=1e-5)
+        cache = c1
+
+
+# ---------------------------------------------------------------------------
+# engine: continuous batching vs the static-batch oracle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = _cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return Engine(cfg, mesh, max_seq=48, n_slots=4)
+
+
+def test_continuous_matches_static_greedy(engine):
+    prompts = np.random.default_rng(0).integers(
+        0, engine.cfg.vocab_size, (4, 9)).astype(np.int32)
+    static = engine.generate_static(prompts, 12)
+    out, stats = engine.serve(
+        [Request(uid=i, prompt=prompts[i].tolist(), max_new_tokens=12)
+         for i in range(4)])
+    for i in range(4):
+        np.testing.assert_array_equal(static[i], np.asarray(out[i]))
+    assert stats["decode_steps"] == 11          # first token from prefill
+    assert len(stats["ttft_s"]) == 4
+
+
+def test_one_prefill_call_per_prompt(engine):
+    """The fused prefill issues ONE compiled call per prompt — not one per
+    position (the seed's behavior)."""
+    before = engine.prefill_calls
+    prompts = np.random.default_rng(2).integers(
+        0, engine.cfg.vocab_size, (3, 9)).astype(np.int32)
+    engine.serve([Request(uid=i, prompt=prompts[i].tolist(),
+                          max_new_tokens=4) for i in range(3)])
+    assert engine.prefill_calls - before == 3
+    # every prompt in this module pads to the same 16-token bucket, so
+    # jit's shape-keyed cache holds exactly one prefill executable
+    cache_size = getattr(engine._prefill_jit, "_cache_size", None)
+    if cache_size is not None:
+        assert cache_size() == 1
+
+
+def test_slot_reuse_midflight_matches_oracle(engine):
+    """More requests than slots with mixed budgets: freed slots are
+    refilled mid-flight and every request still matches the oracle."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, engine.cfg.vocab_size, 9).astype(np.int32)
+               for _ in range(6)]
+    budgets = [3, 8, 5, 13, 2, 7]
+    out, stats = engine.serve(
+        [Request(uid=i, prompt=prompts[i].tolist(),
+                 max_new_tokens=budgets[i]) for i in range(6)])
+    assert sorted(out) == list(range(6))
+    for i in range(6):
+        ref = engine.generate_static(prompts[i][None, :], budgets[i])
+        np.testing.assert_array_equal(ref[0], np.asarray(out[i]))
+
+
+def test_engine_rejects_oversized_request(engine):
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        engine.serve([Request(uid=0, prompt=[1] * 40, max_new_tokens=40)])

@@ -93,6 +93,7 @@ def test_preemption_checkpoint(tmp_path):
     assert ckpt.latest_step(tcfg.ckpt_dir) == final
 
 
+@pytest.mark.slow
 def test_elastic_restore_across_mesh_shapes(tmp_path):
     """Checkpoint written under a (1,1) mesh restores onto (2,2) with the
     new shardings (elastic scaling), if enough devices exist."""
