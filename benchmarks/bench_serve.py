@@ -32,12 +32,13 @@ VARIANTS = [
 ]
 
 
-def _mk_engine(sparsity, n_slots):
+def _mk_engine(sparsity, n_slots, use_pallas=None):
     cfg = get_config("smollm-360m").reduced(
         d_model=128, d_ff=512, vocab_size=512, n_heads=4, n_kv_heads=2,
         head_pad=0, ffn_sparsity=sparsity)
     mesh = make_mesh((1, 1), ("data", "model"))
-    return Engine(cfg, mesh, max_seq=PROMPT_LEN + GEN + 1, n_slots=n_slots)
+    return Engine(cfg, mesh, max_seq=PROMPT_LEN + GEN + 1, n_slots=n_slots,
+                  use_pallas=use_pallas)
 
 
 def _requests(engine, n, gen=GEN):
@@ -87,6 +88,17 @@ def run(report):
             "prefill_calls_per_prompt": round(stats["prefill_calls"] / 9, 2),
             "decode_steps": stats["decode_steps"],
         })
+    # -- sparse-sparse decode through the batched Pallas kernel -------------
+    # 'force' engages the topk_gather kernel everywhere (interpret fallback
+    # on CPU): ONE launch per sparse layer covering the whole decode batch,
+    # consuming the k-WTA support handed off by the Select.
+    engine = _mk_engine(VARIANTS[2][1], n_slots=4, use_pallas="force")
+    ct_tps, ct_ttft, stats = _bench_continuous(engine, n_requests=8)
+    report("serve_sparse_sparse_pallas_batch4", 0.0, {
+        "continuous_tok_s": round(ct_tps, 1),
+        "continuous_ttft_ms": round(ct_ttft * 1e3, 1),
+        "decode_steps": stats["decode_steps"],
+    })
     # -- batch scaling for the sparse-sparse engine -------------------------
     for slots in (1, 2, 8):
         engine = _mk_engine(VARIANTS[2][1], n_slots=slots)

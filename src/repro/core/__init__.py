@@ -12,22 +12,25 @@ Public surface:
   :mod:`repro.core.layers`.
 """
 
-from .api import DENSE, SparsityConfig, choose_path
-from .functional import (cs_matmul, cs_matmul_dense, cs_topk_matmul,
-                         decompress, flops_cs_matmul, flops_cs_topk,
-                         flops_dense)
+from .api import (DENSE, Executor, SparsityConfig, choose_executor,
+                  choose_path)
+from .functional import (cs_matmul, cs_matmul_dense, cs_topk_from_support,
+                         cs_topk_matmul, decompress, flops_cs_matmul,
+                         flops_cs_topk, flops_dense, topk_support_flat)
+from .instrument import reset_topk_count, topk_call_count
 from .kwta import (activation_sparsity, kwta, kwta_bisect, kwta_hist,
-                   kwta_local, kwta_mask)
+                   kwta_local, kwta_mask, kwta_support)
 from .masks import (CSLayout, conv_layout, make_mask, make_routes,
                     pad_to_multiple, routes_to_mask, validate_complementary)
 from .packing import pack_conv, pack_dense, packed_bytes, unpack, unpack_conv
 
 __all__ = [
-    "DENSE", "SparsityConfig", "choose_path",
-    "cs_matmul", "cs_matmul_dense", "cs_topk_matmul", "decompress",
-    "flops_cs_matmul", "flops_cs_topk", "flops_dense",
+    "DENSE", "Executor", "SparsityConfig", "choose_executor", "choose_path",
+    "cs_matmul", "cs_matmul_dense", "cs_topk_from_support", "cs_topk_matmul",
+    "decompress", "flops_cs_matmul", "flops_cs_topk", "flops_dense",
+    "topk_support_flat", "reset_topk_count", "topk_call_count",
     "activation_sparsity", "kwta", "kwta_bisect", "kwta_hist", "kwta_local",
-    "kwta_mask",
+    "kwta_mask", "kwta_support",
     "CSLayout", "conv_layout", "make_mask", "make_routes", "pad_to_multiple",
     "routes_to_mask", "validate_complementary",
     "pack_conv", "pack_dense", "packed_bytes", "unpack", "unpack_conv",

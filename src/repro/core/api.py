@@ -8,6 +8,14 @@ regime analysis of DESIGN.md §2.1:
 * the faithful VPU Hadamard path wins when N >= vpu_crossover (~32),
 * otherwise the MXU decompress path (``dense``) — dense-rate compute from
   1/N the weight memory.
+
+Orthogonal to *which algorithm* runs is *which backend executes it*:
+``choose_executor`` maps the config's ``use_pallas`` flag to a concrete
+:class:`Executor` — the real Pallas kernels on TPU, their ``interpret``
+fallback when forced on CPU (kernel-path tests), or the pure-jnp formulas
+from :mod:`repro.core.functional` otherwise.  ``packed_linear_apply``
+consults it so the serving engine can flip one flag to decode through the
+batched sparse-sparse kernel.
 """
 
 from __future__ import annotations
@@ -16,6 +24,12 @@ import dataclasses
 from typing import Literal, Optional
 
 Path = Literal["auto", "hadamard", "dense", "topk"]
+
+#: Backend selection for the Pallas kernels (see :func:`choose_executor`):
+#: ``auto``  — Pallas on TPU, jnp elsewhere (the safe default);
+#: ``force`` — Pallas everywhere, via ``interpret=True`` off-TPU;
+#: ``off``   — always the jnp formulas (training baseline / debugging).
+PallasMode = Literal["auto", "force", "off"]
 
 #: MXU:VPU per-cycle FLOP ratio on TPU v5e (128x128 MXU vs 8x128 VPU).
 VPU_CROSSOVER_N = 32
@@ -34,6 +48,8 @@ class SparsityConfig:
       path: execution path override ('auto' dispatches by regime).
       kwta_impl: 'topk' (exact) or 'hist' (paper's histogram datapath).
       kwta_partitions: local k-WTA partition count (0 = global).
+      use_pallas: kernel backend ('auto' = Pallas on TPU only, 'force' =
+        Pallas everywhere with interpret fallback off-TPU, 'off' = jnp).
     """
 
     n: int = 1
@@ -43,6 +59,7 @@ class SparsityConfig:
     path: Path = "auto"
     kwta_impl: str = "topk"
     kwta_partitions: int = 0
+    use_pallas: PallasMode = "auto"
 
     @property
     def weight_sparse(self) -> bool:
@@ -63,6 +80,38 @@ class SparsityConfig:
 
 
 DENSE = SparsityConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class Executor:
+    """Resolved kernel backend for one layer application.
+
+    ``use_pallas=False`` means the pure-jnp formulas run (XLA fuses them);
+    ``use_pallas=True`` dispatches the Pallas kernels, with
+    ``interpret=True`` whenever the current backend is not a TPU so the
+    same code path is testable on CPU.
+    """
+
+    use_pallas: bool
+    interpret: bool
+
+
+def choose_executor(cfg: SparsityConfig) -> Executor:
+    """Map ``cfg.use_pallas`` to a concrete backend decision.
+
+    Backend-aware: 'auto' only engages the Pallas kernels on a real TPU
+    (their interpret mode is correct but not fast); 'force' engages them
+    everywhere, falling back to interpret mode off-TPU — the mode the
+    kernel-parity tests and the CPU serving benchmark use to exercise the
+    exact serving code path.
+    """
+    if cfg.use_pallas == "off":
+        return Executor(use_pallas=False, interpret=False)
+    import jax
+    on_tpu = jax.default_backend() == "tpu"
+    if cfg.use_pallas == "force":
+        return Executor(use_pallas=True, interpret=not on_tpu)
+    return Executor(use_pallas=on_tpu, interpret=False)
 
 
 def choose_path(cfg: SparsityConfig, batch: int, d_in: int,

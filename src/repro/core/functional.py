@@ -33,7 +33,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+
+from .instrument import counted_top_k
 
 
 def _layout_from(packed: jax.Array, route: jax.Array):
@@ -98,26 +99,36 @@ def cs_matmul_dense(x: jax.Array, packed: jax.Array, route: jax.Array) -> jax.Ar
     return x @ w
 
 
-def cs_topk_matmul(x: jax.Array, packed: jax.Array, route: jax.Array,
-                   k: int) -> jax.Array:
-    """Sparse-sparse path: contract only the K largest-|x| positions.
+def topk_support_flat(x: jax.Array, k: int):
+    """Select step: the K largest-|x| positions as ``(vals, idx)``.
 
-    Exact whenever x is k-sparse with at most ``k`` non-zeros (the k-WTA
-    contract); otherwise it is the paper's semantics of dropping all but the
-    top-K contributions.
+    ``idx`` is (..., K) int32 flat positions along the last axis — the same
+    support form :func:`repro.core.kwta.kwta_support` hands off, so layers
+    that already ran the Select can skip this call entirely.  Any superset
+    of the true support is exact (extra entries multiply by x == 0).
+    """
+    _, sel = counted_top_k(jnp.abs(x), k)         # (..., K) indices
+    vals = jnp.take_along_axis(x, sel, axis=-1)   # (..., K)
+    return vals, sel.astype(jnp.int32)
+
+
+def cs_topk_from_support(vals: jax.Array, p_idx: jax.Array, s_off: jax.Array,
+                         packed: jax.Array, route: jax.Array) -> jax.Array:
+    """Sparse-sparse Multiply-Route-Sum consuming an explicit support.
+
+    The handoff form of :func:`cs_topk_matmul`: the Select already happened
+    (k-WTA upstream), so this contracts the given K non-zeros against the
+    packed weights without touching the scattered dense activation.
 
     Args:
-      x: (..., D_in), expected k-sparse (output of k-WTA).
-      k: static number of non-zeros to process.
+      vals: (..., K) non-zero activation values.
+      p_idx: (..., K) int partition index of each non-zero (flat_idx // N).
+      s_off: (..., K) int offset-within-partition (flat_idx % N).
+      packed: (G, P, N); route: (G/R, P, N).
+    Returns: (..., D_out = G*N).
     """
     g, p, n, r = _layout_from(packed, route)
-    batch = x.shape[:-1]
-    # Select: support of the sparse activation (any superset of the true
-    # support is exact, since the extra entries multiply by x==0).
-    _, sel = lax.top_k(jnp.abs(x), k)             # (..., K) indices
-    vals = jnp.take_along_axis(x, sel, axis=-1)   # (..., K)
-    p_idx = sel // n                              # (..., K) partition of each nz
-    s_off = sel % n                               # (..., K) offset in partition
+    batch = vals.shape[:-1]
     # Fetch the packed weight rows of the selected partitions. jnp.take with
     # multi-dim indices inserts them in place of axis 1:
     # packed (G, P, N) -> (G, ..., K, N); move G after K.
@@ -129,8 +140,27 @@ def cs_topk_matmul(x: jax.Array, packed: jax.Array, route: jax.Array,
     hit = (rrow == s_off[..., None, None].astype(rrow.dtype))  # (..., K, Gr, N)
     hit = jnp.repeat(hit, r, axis=-2) if r > 1 else hit        # (..., K, G, N)
     contrib = wrow * hit.astype(wrow.dtype)       # (..., K, G, N)
-    y = jnp.einsum("...k,...kgs->...gs", vals, contrib)
+    y = jnp.einsum("...k,...kgs->...gs", vals.astype(wrow.dtype), contrib)
     return y.reshape(*batch, g * n)
+
+
+def cs_topk_matmul(x: jax.Array, packed: jax.Array, route: jax.Array,
+                   k: int) -> jax.Array:
+    """Sparse-sparse path: contract only the K largest-|x| positions.
+
+    Exact whenever x is k-sparse with at most ``k`` non-zeros (the k-WTA
+    contract); otherwise it is the paper's semantics of dropping all but the
+    top-K contributions.  Runs its own Select — callers holding the k-WTA
+    support should use :func:`cs_topk_from_support` instead (one Select per
+    layer, Fig. 8a).
+
+    Args:
+      x: (..., D_in), expected k-sparse (output of k-WTA).
+      k: static number of non-zeros to process.
+    """
+    n = packed.shape[2]
+    vals, sel = topk_support_flat(x, k)
+    return cs_topk_from_support(vals, sel // n, sel % n, packed, route)
 
 
 def flops_cs_matmul(batch: int, d_in: int, d_out: int, n: int) -> int:

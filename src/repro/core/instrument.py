@@ -1,0 +1,34 @@
+"""Trace-time instrumentation for the sparse execution paths.
+
+The paper's Fig. 8a pipeline runs ONE Select (top-k / k-WTA) per sparse
+layer; re-deriving the support downstream (e.g. ``cs_topk_matmul`` calling
+``lax.top_k`` on an already k-sparse input) silently doubles the Select
+cost.  Every Select call site in this repo goes through
+:func:`counted_top_k`, so tests can trace a layer (``jax.make_jaxpr``) and
+assert exactly one top_k was staged out per sparse layer.
+
+The counter ticks at *trace* time — inside ``lax.scan`` bodies it counts
+once per traced superblock, and jit cache hits don't tick it (use
+``jax.make_jaxpr`` or a fresh function to force a trace when asserting).
+"""
+
+from __future__ import annotations
+
+from jax import lax
+
+_COUNTS = {"top_k": 0}
+
+
+def counted_top_k(x, k: int):
+    """``lax.top_k`` that ticks the Select counter (trace-time)."""
+    _COUNTS["top_k"] += 1
+    return lax.top_k(x, k)
+
+
+def topk_call_count() -> int:
+    """Number of Select (top_k) call sites staged since the last reset."""
+    return _COUNTS["top_k"]
+
+
+def reset_topk_count() -> None:
+    _COUNTS["top_k"] = 0

@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+
+from .instrument import counted_top_k
 
 
 def kwta(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
@@ -34,19 +35,36 @@ def kwta(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
     if k <= 0:
         raise ValueError(f"k must be positive, got {k}")
     x_m = jnp.moveaxis(x, axis, -1)
-    d = x_m.shape[-1]
+    y, _ = kwta_support(x_m, k)
+    return jnp.moveaxis(y, -1, axis)
+
+
+def kwta_support(x: jax.Array, k: int):
+    """Exact k-WTA over the last axis that ALSO returns the winner support.
+
+    This is the sparse-activation handoff (paper Fig. 8a: one Select per
+    layer): the consumer of the k-sparse output — typically the next
+    CS-packed projection's sparse-sparse path — takes ``(vals, idx)``
+    directly instead of re-running ``lax.top_k`` on the scattered result.
+
+    Returns ``(y, (vals, idx))`` where ``y`` is the k-sparse activation
+    (same as :func:`kwta`), ``vals`` is (..., K) winner values and ``idx``
+    is (..., K) int32 flat positions along the last axis.  When ``k >= d``
+    the input is already dense and the support is ``None``.
+    """
+    d = x.shape[-1]
     if k >= d:
-        return x
-    vals, idx = lax.top_k(x_m, k)
-    out = jnp.zeros_like(x_m)
-    out = jnp.put_along_axis(out, idx, vals, axis=-1, inplace=False)
-    return jnp.moveaxis(out, -1, axis)
+        return x, None
+    vals, idx = counted_top_k(x, k)
+    y = jnp.put_along_axis(jnp.zeros_like(x), idx, vals, axis=-1,
+                           inplace=False)
+    return y, (vals, idx.astype(jnp.int32))
 
 
 def kwta_mask(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
     """Boolean winner mask of exact k-WTA (ties broken by top_k order)."""
     x_m = jnp.moveaxis(x, axis, -1)
-    _, idx = lax.top_k(x_m, min(k, x_m.shape[-1]))
+    _, idx = counted_top_k(x_m, min(k, x_m.shape[-1]))
     m = jnp.zeros(x_m.shape, jnp.bool_)
     m = jnp.put_along_axis(m, idx, True, axis=-1, inplace=False)
     return jnp.moveaxis(m, -1, axis)

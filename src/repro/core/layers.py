@@ -23,8 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import functional as F
-from .api import SparsityConfig, choose_path
-from .kwta import kwta, kwta_bisect, kwta_hist, kwta_local
+from .api import SparsityConfig, choose_executor, choose_path
+from .kwta import kwta, kwta_bisect, kwta_hist, kwta_local, kwta_support
 from .masks import CSLayout, make_routes
 from .packing import pack_dense
 
@@ -111,12 +111,34 @@ def packed_linear_from_dense(w: np.ndarray, cfg: SparsityConfig, seed: int = 0,
     return params
 
 
+def _topk_execute(vals, idx, packed, route, cfg: SparsityConfig):
+    """Sparse-sparse Multiply-Route-Sum on an explicit support, dispatched
+    to the batched Pallas kernel or the jnp formula per the executor."""
+    n = packed.shape[2]
+    p_idx, s_off = idx // n, idx % n
+    ex = choose_executor(cfg)
+    if ex.use_pallas:
+        # deferred import: kernels.ops imports repro.core at module scope
+        from repro.kernels.ops import topk_gather_support_op
+        return topk_gather_support_op(vals, p_idx, s_off, packed, route,
+                                      ex.interpret)
+    return F.cs_topk_from_support(vals, p_idx, s_off, packed, route)
+
+
 def packed_linear_apply(params, x, cfg: SparsityConfig,
-                        x_is_sparse: bool = False):
+                        x_is_sparse: bool = False, support=None):
     """Apply packed CS linear with regime dispatch (DESIGN.md §2.1).
 
     Handles padded layouts: inputs are zero-padded up to P*N, outputs are
-    sliced back to the bias length (when a bias is present)."""
+    sliced back to the bias length (when a bias is present).
+
+    ``support`` is the optional sparse-activation handoff from the
+    upstream k-WTA (``apply_kwta(..., return_support=True)``): a
+    ``(vals, idx)`` pair over the *unpadded* last axis.  On the topk path
+    it replaces the re-derivation of the support (one Select per layer,
+    paper Fig. 8a); other paths ignore it.  Which backend runs the topk
+    contraction — batched Pallas kernel vs jnp — is the executor's call
+    (``cfg.use_pallas``, see :func:`repro.core.api.choose_executor`)."""
     packed = params["packed"].astype(x.dtype)
     route = params["route"]
     d_in = packed.shape[1] * packed.shape[2]
@@ -126,7 +148,14 @@ def packed_linear_apply(params, x, cfg: SparsityConfig,
     batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
     path = choose_path(cfg, batch, d_in, x_is_sparse)
     if path == "topk":
-        y = F.cs_topk_matmul(x, packed, route, cfg.k_for(d_in))
+        if support is None:
+            # No handoff: run this layer's own Select on the k-sparse x.
+            vals, idx = F.topk_support_flat(x, cfg.k_for(d_in))
+        else:
+            # Handoff indices address the unpadded axis; zero-padding only
+            # appends positions, so they stay valid in the padded layout.
+            vals, idx = support
+        y = _topk_execute(vals, idx, packed, route, cfg)
     elif path == "dense":
         y = F.cs_matmul_dense(x, packed, route)
     else:
@@ -137,18 +166,27 @@ def packed_linear_apply(params, x, cfg: SparsityConfig,
     return y
 
 
-def apply_kwta(x, cfg: SparsityConfig):
-    """Apply the configured k-WTA activation along the last axis."""
+def apply_kwta(x, cfg: SparsityConfig, return_support: bool = False):
+    """Apply the configured k-WTA activation along the last axis.
+
+    With ``return_support=True`` returns ``(y, support)`` where ``support``
+    is the ``(vals, idx)`` winner set when the exact global top-k impl ran,
+    else ``None`` (hist/bisect keep >= K values with no index form; local
+    k-WTA selects per-partition).  Passing the support to the next
+    ``packed_linear_apply`` makes the Select run once per layer."""
     if not cfg.activation_sparse:
-        return x
+        return (x, None) if return_support else x
     k = cfg.k_for(x.shape[-1])
+    support = None
     if cfg.kwta_impl == "hist":
-        return kwta_hist(x, k)
-    if cfg.kwta_impl == "bisect":
-        return kwta_bisect(x, k)
-    if cfg.kwta_partitions > 1:
-        return kwta_local(x, k, cfg.kwta_partitions)
-    return kwta(x, k)
+        y = kwta_hist(x, k)
+    elif cfg.kwta_impl == "bisect":
+        y = kwta_bisect(x, k)
+    elif cfg.kwta_partitions > 1:
+        y = kwta_local(x, k, cfg.kwta_partitions)
+    else:
+        y, support = kwta_support(x, k)
+    return (y, support) if return_support else y
 
 
 # ---------------------------------------------------------------------------

@@ -5,21 +5,31 @@ Kernels (each: <name>.py with pl.pallas_call + BlockSpec VMEM tiling,
 
 * ``packed_matmul``     — matmul with in-VMEM CS decompression (MXU path).
 * ``grouped_cs_matmul`` — shared-route grouped matmul (N× fewer MXU FLOPs).
-* ``topk_gather``       — sparse-sparse contraction (K non-zeros only).
+* ``topk_gather``       — batched sparse-sparse contraction (K non-zeros
+  only; (nG, B) grid keeps the packed tile VMEM-resident across the whole
+  decode batch — one launch per layer per step).
 * ``kwta_hist``         — histogram-threshold global k-WTA (paper Fig. 10).
+
+Layer code does not call these directly: ``packed_linear_apply`` routes
+through the executor flag ``SparsityConfig.use_pallas`` ('auto' = Pallas
+on TPU only, 'force' = everywhere with interpret fallback off-TPU, 'off' =
+pure jnp) — see :func:`repro.core.api.choose_executor`.  The serving
+entrypoint exposes it as ``Engine(..., use_pallas=...)`` /
+``--use-pallas``.
 """
 
 from .grouped_cs_matmul import (grouped_cs_matmul, interleave_out,
                                 permute_activations, slot_major_packed)
 from .kwta_hist import kwta_hist_pallas
 from .ops import (grouped_cs_matmul_op, kwta_hist_op, packed_matmul_op,
-                  topk_gather_op)
+                  topk_gather_op, topk_gather_support_op)
 from .packed_matmul import packed_matmul, to_partition_major
 from .topk_gather import topk_gather_matmul, topk_support
 
 __all__ = [
     "grouped_cs_matmul", "interleave_out", "permute_activations",
     "slot_major_packed", "kwta_hist_pallas", "grouped_cs_matmul_op",
-    "kwta_hist_op", "packed_matmul_op", "topk_gather_op", "packed_matmul",
-    "to_partition_major", "topk_gather_matmul", "topk_support",
+    "kwta_hist_op", "packed_matmul_op", "topk_gather_op",
+    "topk_gather_support_op", "packed_matmul", "to_partition_major",
+    "topk_gather_matmul", "topk_support",
 ]

@@ -14,6 +14,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import functional as F
 from .grouped_cs_matmul import grouped_cs_matmul
@@ -89,20 +90,82 @@ grouped_cs_matmul_op.defvjp(_gm_fwd, _gm_bwd)
 
 
 # ---------------------------------------------------------------------------
-# sparse-sparse topk-gather op (serving path; custom_vjp for completeness)
+# sparse-sparse topk-gather op (serving path; straight-through custom_vjp:
+# gradients flow only on the selected support, mirroring _pm_bwd)
 # ---------------------------------------------------------------------------
 
-def topk_gather_op(x, packed, route, k: int, interpret: bool = False):
-    """Sparse-sparse contraction via the Pallas kernel.
+def _float0(a):
+    """Zero cotangent for integer primals (JAX's float0 convention)."""
+    return np.zeros(a.shape, dtype=jax.dtypes.float0)
 
-    x: (B, D_in) k-sparse; packed (G, P, N); route (G/R, P, N).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def topk_gather_support_op(vals, p_idx, s_off, packed, route,
+                           interpret: bool = False):
+    """Batched sparse-sparse contraction consuming an explicit support.
+
+    The executor target of the sparse-activation handoff: the upstream
+    k-WTA already ran the ONE Select of the layer, so this takes the
+    support directly and issues a single Pallas launch for the whole
+    (flattened) decode batch.
+
+    vals/p_idx/s_off: (..., K) support (see ``F.topk_support_flat``);
+    packed: (G, P, N); route: (G/R, P, N).  Returns (..., G*N) in
+    ``vals.dtype``.
     """
     g, p, n = packed.shape
-    vals, p_idx, s_off = topk_support(x, k, n)
+    lead, k = vals.shape[:-1], vals.shape[-1]
     pr, rr = to_partition_major(packed, route)
-    y = topk_gather_matmul(vals, p_idx, s_off, pr, rr,
-                           interpret=interpret or not _on_tpu())
-    return y.astype(x.dtype)
+    y = topk_gather_matmul(vals.astype(jnp.float32).reshape(-1, k),
+                           p_idx.reshape(-1, k), s_off.reshape(-1, k),
+                           pr, rr, interpret=interpret or not _on_tpu())
+    return y.reshape(*lead, g * n).astype(vals.dtype)
+
+
+def _tgs_fwd(vals, p_idx, s_off, packed, route, interpret):
+    y = topk_gather_support_op(vals, p_idx, s_off, packed, route, interpret)
+    return y, (vals, p_idx, s_off, packed, route)
+
+
+def _tgs_bwd(interpret, res, dy):
+    """Sparse-cost backward on the selected support only: d_vals re-reads
+    the same K packed rows as the forward; d_packed scatter-adds each
+    non-zero's contribution into its partition row (same N-fold savings)."""
+    vals, p_idx, s_off, packed, route = res
+    g, p, n = packed.shape
+    r = g // route.shape[0]
+    k = vals.shape[-1]
+    wrow = jnp.moveaxis(jnp.take(packed, p_idx, axis=1), 0, -2)  # (...,K,G,N)
+    rrow = jnp.moveaxis(jnp.take(route, p_idx, axis=1), 0, -2)   # (...,K,Gr,N)
+    hit = (rrow == s_off[..., None, None].astype(rrow.dtype))
+    hit = (jnp.repeat(hit, r, axis=-2) if r > 1 else hit).astype(jnp.float32)
+    dyr = dy.reshape(*dy.shape[:-1], g, n).astype(jnp.float32)
+    wsel = wrow.astype(jnp.float32) * hit
+    dvals = jnp.einsum("...gs,...kgs->...k", dyr, wsel).astype(vals.dtype)
+    contrib = (vals.astype(jnp.float32)[..., None, None]
+               * dyr[..., None, :, :] * hit)                     # (...,K,G,N)
+    dpacked = jnp.zeros((g, p, n), jnp.float32).at[
+        :, p_idx.reshape(-1, k), :].add(
+        jnp.moveaxis(contrib.reshape(-1, k, g, n), 2, 0))
+    return (dvals, _float0(p_idx), _float0(s_off),
+            dpacked.astype(packed.dtype), _float0(route))
+
+
+topk_gather_support_op.defvjp(_tgs_fwd, _tgs_bwd)
+
+
+def topk_gather_op(x, packed, route, k: int, interpret: bool = False):
+    """Sparse-sparse contraction via the Pallas kernel, Select included.
+
+    x: (..., D_in) k-sparse; packed (G, P, N); route (G/R, P, N).
+    Differentiable: d_x flows straight-through onto the selected support
+    (via the take_along_axis in the Select), d_packed via the custom VJP of
+    :func:`topk_gather_support_op`.
+    """
+    n = packed.shape[2]
+    vals, p_idx, s_off = topk_support(x, k, n)
+    return topk_gather_support_op(vals, p_idx, s_off, packed, route,
+                                  interpret).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

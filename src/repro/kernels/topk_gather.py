@@ -18,10 +18,13 @@ Layouts:
   route  (P, G, N)    int8
   out    (B, G*N)     f32
 
-Grid: (B, nG). Each step loops over K with a fori_loop of dynamic row
-loads — the weight tile (P, block_g, N) stays VMEM-resident across the K
-loop (weight reuse across the batch grid dim is handled by Pallas' revisit
-caching since the index map ignores b).
+Grid: (nG, B) — batch innermost.  Each step loops over K with a fori_loop
+of dynamic row loads; the weight tile (P, block_g, N) stays VMEM-resident
+across the K loop AND across the whole decode batch: with B as the fastest
+grid dimension the packed/route index maps are constant while b sweeps, so
+Pallas' revisit caching skips the re-fetch and one launch serves every
+decode slot (the batched-decode regime of arXiv 2311.07625 — weight reads
+amortize over B, which is where weight × activation sparsity multiply).
 """
 
 from __future__ import annotations
@@ -63,19 +66,27 @@ def topk_gather_matmul(vals: jax.Array, p_idx: jax.Array, s_off: jax.Array,
     b, k_nnz = vals.shape
     p, g, n = packed_p.shape
     block_g = block_g or g
+    if k_nnz < 1:
+        raise ValueError(f"k_nnz={k_nnz} must be >= 1 (at least one "
+                         "non-zero per row)")
+    if block_g > g:
+        raise ValueError(f"block_g={block_g} exceeds G={g}")
     if g % block_g:
-        raise ValueError(f"G={g} must divide block_g={block_g}")
+        raise ValueError(f"block_g={block_g} must divide G={g}")
+    # Grid order (nG, B): batch innermost so the packed/route tiles (index
+    # maps ignore ib) are revisited — fetched once per group tile, resident
+    # in VMEM for the whole decode batch.
     return pl.pallas_call(
         functools.partial(_kernel, k_nnz=k_nnz),
-        grid=(b, g // block_g),
+        grid=(g // block_g, b),
         in_specs=[
-            pl.BlockSpec((1, k_nnz), lambda ib, ig: (ib, 0)),
-            pl.BlockSpec((1, k_nnz), lambda ib, ig: (ib, 0)),
-            pl.BlockSpec((1, k_nnz), lambda ib, ig: (ib, 0)),
-            pl.BlockSpec((p, block_g, n), lambda ib, ig: (0, ig, 0)),
-            pl.BlockSpec((p, block_g, n), lambda ib, ig: (0, ig, 0)),
+            pl.BlockSpec((1, k_nnz), lambda ig, ib: (ib, 0)),
+            pl.BlockSpec((1, k_nnz), lambda ig, ib: (ib, 0)),
+            pl.BlockSpec((1, k_nnz), lambda ig, ib: (ib, 0)),
+            pl.BlockSpec((p, block_g, n), lambda ig, ib: (0, ig, 0)),
+            pl.BlockSpec((p, block_g, n), lambda ig, ib: (0, ig, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_g * n), lambda ib, ig: (ib, ig)),
+        out_specs=pl.BlockSpec((1, block_g * n), lambda ig, ib: (ib, ig)),
         out_shape=jax.ShapeDtypeStruct((b, g * n), jnp.float32),
         interpret=interpret,
     )(vals, p_idx.astype(jnp.int32), s_off.astype(jnp.int32),
@@ -85,7 +96,8 @@ def topk_gather_matmul(vals: jax.Array, p_idx: jax.Array, s_off: jax.Array,
 def topk_support(x: jax.Array, k: int, n: int):
     """Select step (paper's k-WTA + index extraction): the K largest-|x|
     positions as (vals, p_idx, s_off). Exact for any k-sparse x."""
-    _, sel = lax.top_k(jnp.abs(x), k)
+    from repro.core.instrument import counted_top_k
+    _, sel = counted_top_k(jnp.abs(x), k)
     vals = jnp.take_along_axis(x, sel, axis=-1)
     return (vals.astype(jnp.float32), (sel // n).astype(jnp.int32),
             (sel % n).astype(jnp.int32))

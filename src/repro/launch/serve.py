@@ -41,8 +41,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -67,10 +68,24 @@ def _bucket(n: int, max_seq: int) -> int:
 
 
 class Engine:
-    """Continuous-batching server for one model on one mesh."""
+    """Continuous-batching server for one model on one mesh.
+
+    ``use_pallas`` overrides the kernel-executor flag on BOTH sparsity
+    families (cfg.ffn_sparsity / cfg.proj_sparsity): 'auto' (Pallas on TPU
+    only), 'force' (everywhere, interpret fallback off-TPU) or 'off' (pure
+    jnp).  With the sparse-sparse config this is what routes the decode
+    batch through the batched ``topk_gather`` kernel — one launch per
+    sparse layer per decode step."""
 
     def __init__(self, cfg, mesh, max_seq: int, n_slots: int = 4,
-                 params=None):
+                 params=None, use_pallas: Optional[str] = None):
+        if use_pallas is not None:
+            cfg = dataclasses.replace(
+                cfg,
+                ffn_sparsity=dataclasses.replace(
+                    cfg.ffn_sparsity, use_pallas=use_pallas),
+                proj_sparsity=dataclasses.replace(
+                    cfg.proj_sparsity, use_pallas=use_pallas))
         self.cfg = cfg
         self.mesh = mesh
         self.max_seq = max_seq
@@ -110,8 +125,17 @@ class Engine:
 
     def _prefill(self, prompt: Sequence[int]):
         """One fused-prefill call. Returns (last-position logits (vocab,),
-        cache fragment sized (n_units, 1, max_seq, ...))."""
+        cache fragment sized (n_units, 1, max_seq, ...)).
+
+        Rejects prompts longer than ``max_seq`` here, at the boundary:
+        ``_bucket`` clamps to ``max_seq``, so an oversized prompt reaching
+        it would be silently truncated to a partial prefix (``serve()``
+        validates too, but direct callers must not depend on that)."""
         p_len = len(prompt)
+        if p_len > self.max_seq:
+            raise ValueError(
+                f"prompt length {p_len} exceeds max_seq {self.max_seq}; "
+                "refusing to truncate")
         bucket = _bucket(p_len, self.max_seq)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :p_len] = np.asarray(prompt, np.int32)
@@ -232,6 +256,10 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--use-pallas", choices=("auto", "force", "off"),
+                    default=None,
+                    help="kernel executor override for the sparse paths "
+                    "(default: the config's own setting)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -240,7 +268,7 @@ def main():
     dims = tuple(int(x) for x in args.mesh.split("x"))
     mesh = make_mesh(dims, ("data", "model"))
     engine = Engine(cfg, mesh, max_seq=args.prompt_len + args.gen + 1,
-                    n_slots=args.slots)
+                    n_slots=args.slots, use_pallas=args.use_pallas)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

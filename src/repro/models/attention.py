@@ -20,8 +20,8 @@ import numpy as np
 from jax import lax
 
 from repro.core.api import SparsityConfig
-from repro.core.layers import (linear_apply, linear_init, packed_linear_apply,
-                               packed_linear_init)
+from repro.core.layers import (apply_kwta, linear_apply, linear_init,
+                               packed_linear_apply, packed_linear_init)
 from repro.sharding.context import constrain
 from .common import apply_rope, normal_init
 
@@ -35,10 +35,26 @@ def _proj_init(key, d_in, d_out, sp: SparsityConfig, out_axis, name_seed):
     return p, s
 
 
-def _proj_apply(params, x, sp: SparsityConfig):
+def _proj_apply(params, x, sp: SparsityConfig, x_is_sparse=False,
+                support=None):
     if "packed" in params:
-        return packed_linear_apply(params, x, sp)
+        return packed_linear_apply(params, x, sp, x_is_sparse=x_is_sparse,
+                                   support=support)
     return linear_apply(params, x)
+
+
+def _o_proj(params, out_flat, sp: SparsityConfig):
+    """Output projection with the sparse-activation handoff: when the
+    projection family is activation-sparse (cfg.proj_sparsity.k_frac), the
+    attention output goes through k-WTA and its winner support is handed to
+    the CS-packed o-projection — the same one-Select-per-layer pipeline as
+    the FFN down projection (paper Fig. 8a applied to §6.4's Transformer
+    projections)."""
+    if sp.activation_sparse:
+        out_flat, support = apply_kwta(out_flat, sp, return_support=True)
+        return _proj_apply(params, out_flat, sp, x_is_sparse=True,
+                           support=support)
+    return _proj_apply(params, out_flat, sp)
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +186,7 @@ def _gqa_forward(params, x, cfg, positions):
         out = _causal_attn(q, k, v, scale)
     out = constrain(out, "batch", "seq", "heads", None)
     out = _mask_dummy_heads(out, cfg)
-    y = _proj_apply(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
+    y = _o_proj(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
     return y, k_rows, v_rows
 
 
@@ -369,7 +385,7 @@ def gqa_decode(params, x, cfg, cache, pos):
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
     out = _mask_dummy_heads(out, cfg)
-    y = _proj_apply(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
+    y = _o_proj(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
     return y, new_cache
 
 

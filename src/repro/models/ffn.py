@@ -5,11 +5,15 @@ layers, their §6.4 future direction).
 Sparse-sparse FFN dataflow (mirrors paper Fig. 8a at layer granularity):
 
     h   = act(W_gate x) * (W_up x)        (packed CS weights: sparse-dense)
-    h_s = k-WTA(h)                        (Select)
+    h_s = k-WTA(h)                        (Select — the layer's ONE top_k;
+                                           its (vals, idx) support is handed
+                                           straight to the down projection)
     y   = W_down h_s                      (packed CS; with the k-sparse
                                            input this is the sparse-sparse
                                            Multiply-Route-Sum — dispatched
-                                           to the topk path when B·K < d_ff)
+                                           to the topk path when B·K < d_ff,
+                                           consuming the handed-off support
+                                           so no second top_k runs)
 """
 
 from __future__ import annotations
@@ -47,9 +51,10 @@ def ffn_init(key, d_model: int, d_ff: int, cfg_sp: SparsityConfig,
     return params, specs
 
 
-def _apply_one(p, x, sp: SparsityConfig, x_is_sparse=False):
+def _apply_one(p, x, sp: SparsityConfig, x_is_sparse=False, support=None):
     if "packed" in p:
-        return packed_linear_apply(p, x, sp, x_is_sparse=x_is_sparse)
+        return packed_linear_apply(p, x, sp, x_is_sparse=x_is_sparse,
+                                   support=support)
     return linear_apply(p, x)
 
 
@@ -61,6 +66,8 @@ def ffn_apply(params, x, cfg_sp: SparsityConfig, act: str = "silu"):
     else:
         h = a(up)
     h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
-    h = apply_kwta(h, cfg_sp)  # Select (k-WTA) — identity when disabled
+    # Select (k-WTA) — identity when disabled. The winner support is handed
+    # to the down projection so the sparse-sparse path never re-derives it.
+    h, support = apply_kwta(h, cfg_sp, return_support=True)
     return _apply_one(params["down"], h, cfg_sp,
-                      x_is_sparse=cfg_sp.activation_sparse)
+                      x_is_sparse=cfg_sp.activation_sparse, support=support)

@@ -342,6 +342,12 @@ def serve_step(params, cache, batch, pos, cfg):
     pos: scalar position (static batch) or (B,) per-slot positions
     (continuous batching).
     Returns (logits (B, vocab), new_cache).
+
+    Sparse-sparse decode runs the fused pipeline per layer: the FFN's
+    k-WTA Select hands its (vals, idx) support straight to the down
+    projection (one top_k per sparse layer), which contracts the whole
+    decode batch in one ``topk_gather`` launch when the executor
+    (``cfg.ffn_sparsity.use_pallas``) engages the Pallas path.
     """
     ct = dtype_of(cfg.compute_dtype)
     if cfg.frontend == "embed":

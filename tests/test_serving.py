@@ -217,3 +217,43 @@ def test_slot_reuse_midflight_matches_oracle(engine):
 def test_engine_rejects_oversized_request(engine):
     with pytest.raises(ValueError, match="exceeds max_seq"):
         engine.serve([Request(uid=0, prompt=[1] * 40, max_new_tokens=40)])
+
+
+def test_prefill_boundary_rejects_oversized_prompt(engine):
+    """_prefill called directly (outside serve()'s validation) must raise
+    rather than silently truncate the prompt to the max_seq bucket."""
+    with pytest.raises(ValueError, match="refusing to truncate"):
+        engine._prefill(list(range(engine.max_seq + 1)))
+
+
+# ---------------------------------------------------------------------------
+# sparse-sparse decode through the batched Pallas kernel (interpret on CPU)
+# ---------------------------------------------------------------------------
+
+def _sparse_engine(use_pallas):
+    from repro.core.api import SparsityConfig
+    cfg = _cfg(d_ff=256,
+               ffn_sparsity=SparsityConfig(n=4, k_frac=0.125))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return Engine(cfg, mesh, max_seq=32, n_slots=4, use_pallas=use_pallas)
+
+
+def test_sparse_sparse_continuous_matches_static_with_pallas():
+    """Continuous batching through the batched topk_gather kernel (forced,
+    interpret fallback on CPU) must match both the static-batch oracle and
+    the jnp-executor engine token-for-token."""
+    eng_pl = _sparse_engine("force")
+    assert eng_pl.cfg.ffn_sparsity.use_pallas == "force"
+    prompts = np.random.default_rng(5).integers(
+        0, eng_pl.cfg.vocab_size, (4, 9)).astype(np.int32)
+    reqs = lambda: [Request(uid=i, prompt=prompts[i].tolist(),  # noqa: E731
+                            max_new_tokens=10) for i in range(4)]
+    out_pl, stats = eng_pl.serve(reqs())
+    static = eng_pl.generate_static(prompts, 10)
+    eng_jnp = _sparse_engine("off")
+    out_jnp, _ = eng_jnp.serve(reqs())
+    for i in range(4):
+        np.testing.assert_array_equal(static[i], np.asarray(out_pl[i]))
+        np.testing.assert_array_equal(np.asarray(out_jnp[i]),
+                                      np.asarray(out_pl[i]))
+    assert stats["decode_steps"] == 9
