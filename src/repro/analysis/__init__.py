@@ -1,0 +1,40 @@
+"""Static analysis of the sparse-sparse execution paths.
+
+A linter that *proves* — from staged jaxprs and compiled HLO, without
+running the model — that the complementary-sparsity invariants hold:
+one Select per sparse layer (paper Fig. 8a), the k-sparse support is
+consumed by the Pallas kernel (never a dense ``dot_general``), no
+float64 leaks into kernels, every ``pallas_call`` BlockSpec fits its
+array and VMEM, and the compiled decode step stays on-device.
+
+Entry points:
+
+* ``analysis.lint_fn(fn, *args)`` — lint any traceable callable.
+* ``analysis.lint_config("smollm_360m")`` — lint a named config's
+  decode/prefill/kernel/train entrypoints abstractly.
+* ``python -m repro.analysis --config smollm_360m --fail-on-findings``
+  — the CI job.
+
+See README.md in this directory for the rule catalogue and how to
+waive a finding.
+"""
+
+from .findings import SEVERITIES, Finding, Report
+from .hlo_rules import rule_hlo_collectives, rule_hlo_host_transfer
+from .jaxpr_walk import iter_eqns, propagate_taint, sub_jaxprs
+from .lint import (ENTRIES, expected_selects, family_path, family_selects,
+                   lint_config, lint_fn, lint_hlo, lint_kernel_pipeline,
+                   seeded_regressions, self_test)
+from .rules import (SELECT_PRIMS, layer_key, rule_dense_fallback,
+                    rule_dtype_promotion, rule_pallas_resource,
+                    rule_select_count)
+
+__all__ = [
+    "ENTRIES", "Finding", "Report", "SELECT_PRIMS", "SEVERITIES",
+    "expected_selects", "family_path", "family_selects", "iter_eqns",
+    "layer_key", "lint_config", "lint_fn", "lint_hlo",
+    "lint_kernel_pipeline", "propagate_taint", "rule_dense_fallback",
+    "rule_dtype_promotion", "rule_hlo_collectives",
+    "rule_hlo_host_transfer", "rule_pallas_resource", "rule_select_count",
+    "seeded_regressions", "self_test", "sub_jaxprs",
+]

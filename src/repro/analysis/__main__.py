@@ -1,0 +1,97 @@
+"""CLI: lint a named config's entrypoints for sparsity invariants.
+
+    python -m repro.analysis --config smollm_360m --fail-on-findings
+    python -m repro.analysis --self-test          # CI negative test
+
+Exit codes: 0 clean (or all seeded regressions caught under
+``--self-test``); 1 findings present (or a regression slipped through);
+2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Sparsity-invariant linter: prove the sparse-sparse "
+                    "path stays sparse (one Select per layer, Pallas "
+                    "consumes the support, no f64, BlockSpecs fit VMEM, "
+                    "decode stays on-device).")
+    p.add_argument("--config", help="architecture config name "
+                   "(e.g. smollm_360m); see repro.configs.list_archs()")
+    p.add_argument("--entries", default="decode,prefill,kernel,train",
+                   help="comma-separated entrypoints to lint "
+                   "(default: all)")
+    p.add_argument("--use-pallas", default="force",
+                   choices=["auto", "force", "off", "config"],
+                   help="override the config's Pallas mode while linting "
+                   "('force' checks the kernel path even on CPU; "
+                   "'config' keeps the config's own)")
+    p.add_argument("--slots", type=int, default=4,
+                   help="decode batch slots (default 4)")
+    p.add_argument("--seq", type=int, default=8,
+                   help="prefill/train sequence length (default 8)")
+    p.add_argument("--reduced", action="store_true",
+                   help="lint the reduced() smoke-test config instead of "
+                   "the full-scale one")
+    p.add_argument("--no-hlo", action="store_true",
+                   help="skip AOT-compiling the decode step for the HLO "
+                   "rule pack (faster)")
+    p.add_argument("--waive", action="append", default=[],
+                   metavar="RULE[:SCOPE]",
+                   help="waive findings of RULE (optionally restricted "
+                   "to a name-stack scope prefix); repeatable")
+    p.add_argument("--json", action="store_true",
+                   help="emit the report as JSON")
+    p.add_argument("--fail-on-findings", action="store_true",
+                   help="exit 1 when findings remain (default behavior; "
+                   "kept explicit for CI readability)")
+    p.add_argument("--self-test", action="store_true",
+                   help="run the seeded regressions and exit 0 only if "
+                   "the linter catches all of them")
+    p.add_argument("--seed-regression", metavar="NAME",
+                   choices=["double-topk", "f64-kernel"],
+                   help="lint the named deliberately-broken pipeline and "
+                   "exit by its findings (demonstrates the non-zero exit)")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    from repro.analysis import lint_config, seeded_regressions, self_test
+
+    if args.seed_regression:
+        report = seeded_regressions()[args.seed_regression]()
+        print(report.to_json() if args.json else report.render())
+        return 0 if report.ok else 1
+
+    if args.self_test:
+        failures = self_test()
+        if failures:
+            for f in failures:
+                print(f, file=sys.stderr)
+            return 1
+        print("self-test: all seeded regressions caught")
+        return 0
+
+    if not args.config:
+        print("error: --config is required (or use --self-test)",
+              file=sys.stderr)
+        return 2
+
+    entries = tuple(e.strip() for e in args.entries.split(",") if e.strip())
+    mode = None if args.use_pallas == "config" else args.use_pallas
+    report = lint_config(
+        args.config, entries=entries, use_pallas=mode, slots=args.slots,
+        seq=args.seq, reduced=args.reduced, check_hlo=not args.no_hlo,
+        waivers=tuple(args.waive))
+    print(report.to_json() if args.json else report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""HLO-level lint rules: host transfers and unexpected collectives.
+
+The jaxpr rules prove properties of the *staged* program; these rules
+check what the compiler actually emitted.  They parse compiled HLO text
+via :mod:`repro.launch.hlo` — the decode step must stay on-device
+(``hlo-host-transfer``) and must not sprout collectives the sharding
+plan didn't ask for (``hlo-collective``).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.launch.hlo import collective_stats, host_transfer_ops
+
+from .findings import Finding
+
+#: Collective kinds tracked by launch/hlo.py.
+KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def rule_hlo_host_transfer(hlo_text: str, entry: str = "") -> List[Finding]:
+    """Any host/device boundary crossing on the linted path is an error.
+
+    A single host round-trip costs more than an entire decode step; the
+    sparse-sparse path must be resident."""
+    out: List[Finding] = []
+    for kind, line in host_transfer_ops(hlo_text):
+        out.append(Finding(
+            rule="hlo-host-transfer", entry=entry, primitive=kind,
+            message=f"host transfer in compiled HLO: {line[:160]}"))
+    return out
+
+
+def rule_hlo_collectives(hlo_text: str, entry: str = "",
+                         allowed: Sequence[str] = ()) -> List[Finding]:
+    """Collectives outside the ``allowed`` kinds are errors.
+
+    The message carries byte totals and how many instances sit inside
+    while-loop bodies (those run once per scan trip — n_units times for
+    the layer stack — so they dominate even when the flat count looks
+    small)."""
+    stats = collective_stats(hlo_text)
+    out: List[Finding] = []
+    for kind in KINDS:
+        count = int(stats.get(f"{kind}_count", 0))
+        if not count or kind in allowed:
+            continue
+        nbytes = int(stats.get(f"{kind}_bytes", 0))
+        in_while = int(stats.get(f"{kind}_in_while_count", 0))
+        out.append(Finding(
+            rule="hlo-collective", entry=entry, primitive=kind,
+            message=f"unexpected {kind} x{count} ({nbytes} bytes per "
+                    f"execution, {in_while} inside while bodies) in the "
+                    f"compiled {entry or 'entry'} module"))
+    return out

@@ -17,7 +17,8 @@ from .api import (DENSE, Executor, SparsityConfig, choose_executor,
 from .functional import (cs_matmul, cs_matmul_dense, cs_topk_from_support,
                          cs_topk_matmul, decompress, flops_cs_matmul,
                          flops_cs_topk, flops_dense, topk_support_flat)
-from .instrument import reset_topk_count, topk_call_count
+from .instrument import (SelectCounter, count_selects, reset_topk_count,
+                         topk_call_count)
 from .kwta import (activation_sparsity, kwta, kwta_bisect, kwta_hist,
                    kwta_local, kwta_mask, kwta_support)
 from .masks import (CSLayout, conv_layout, make_mask, make_routes,
@@ -28,7 +29,8 @@ __all__ = [
     "DENSE", "Executor", "SparsityConfig", "choose_executor", "choose_path",
     "cs_matmul", "cs_matmul_dense", "cs_topk_from_support", "cs_topk_matmul",
     "decompress", "flops_cs_matmul", "flops_cs_topk", "flops_dense",
-    "topk_support_flat", "reset_topk_count", "topk_call_count",
+    "topk_support_flat", "SelectCounter", "count_selects",
+    "reset_topk_count", "topk_call_count",
     "activation_sparsity", "kwta", "kwta_bisect", "kwta_hist", "kwta_local",
     "kwta_mask", "kwta_support",
     "CSLayout", "conv_layout", "make_mask", "make_routes", "pad_to_multiple",

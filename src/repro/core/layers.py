@@ -147,19 +147,23 @@ def packed_linear_apply(params, x, cfg: SparsityConfig,
         x = jnp.pad(x, pad)
     batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
     path = choose_path(cfg, batch, d_in, x_is_sparse)
-    if path == "topk":
-        if support is None:
-            # No handoff: run this layer's own Select on the k-sparse x.
-            vals, idx = F.topk_support_flat(x, cfg.k_for(d_in))
+    # The cs_<path> scope lets the static analyzer attribute every staged
+    # primitive to the execution path that produced it (repro.analysis).
+    with jax.named_scope(f"cs_{path}"):
+        if path == "topk":
+            if support is None:
+                # No handoff: run this layer's own Select on the k-sparse x.
+                vals, idx = F.topk_support_flat(x, cfg.k_for(d_in))
+            else:
+                # Handoff indices address the unpadded axis; zero-padding
+                # only appends positions, so they stay valid in the padded
+                # layout.
+                vals, idx = support
+            y = _topk_execute(vals, idx, packed, route, cfg)
+        elif path == "dense":
+            y = F.cs_matmul_dense(x, packed, route)
         else:
-            # Handoff indices address the unpadded axis; zero-padding only
-            # appends positions, so they stay valid in the padded layout.
-            vals, idx = support
-        y = _topk_execute(vals, idx, packed, route, cfg)
-    elif path == "dense":
-        y = F.cs_matmul_dense(x, packed, route)
-    else:
-        y = F.cs_matmul(x, packed, route)
+            y = F.cs_matmul(x, packed, route)
     if "b" in params:
         b = params["b"]
         y = y[..., :b.shape[0]] + b.astype(x.dtype)

@@ -18,6 +18,8 @@ entrypoint exposes it as ``Engine(..., use_pallas=...)`` /
 ``--use-pallas``.
 """
 
+from .block_validation import (check_block_shape, estimate_vmem_bytes,
+                               validate_block, validate_blocks, vmem_budget)
 from .grouped_cs_matmul import (grouped_cs_matmul, interleave_out,
                                 permute_activations, slot_major_packed)
 from .kwta_hist import kwta_hist_pallas
@@ -32,4 +34,6 @@ __all__ = [
     "kwta_hist_op", "packed_matmul_op", "topk_gather_op",
     "topk_gather_support_op", "packed_matmul", "to_partition_major",
     "topk_gather_matmul", "topk_support",
+    "check_block_shape", "estimate_vmem_bytes", "validate_block",
+    "validate_blocks", "vmem_budget",
 ]

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .block_validation import validate_blocks
+
 
 def _kernel(x_ref, w_ref, o_ref):
     k = pl.program_id(3)
@@ -55,11 +57,12 @@ def grouped_cs_matmul(xg: jax.Array, packed: jax.Array,
     n2, p2, g = packed.shape
     if (n2, p2) != (n, p):
         raise ValueError(f"xg {xg.shape} vs packed {packed.shape}")
-    block_b = min(block_b, b)
-    block_p = min(block_p, p)
-    block_g = min(block_g, g)
-    if b % block_b or p % block_p or g % block_g:
-        raise ValueError("block sizes must divide (B, P, G)")
+    # Defaulted-block convention: clamp to the dim, then require exact
+    # divisibility (shared validator — uniform message across kernels).
+    block_b, block_p, block_g = validate_blocks((
+        ("block_b", block_b, b, "B"),
+        ("block_p", block_p, p, "P"),
+        ("block_g", block_g, g, "G")))
     grid = (n, b // block_b, g // block_g, p // block_p)
     return pl.pallas_call(
         _kernel,

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .block_validation import validate_block
+
 _BINS = 256
 _RADIX = 16
 
@@ -74,9 +76,7 @@ def kwta_hist_pallas(x: jax.Array, k: int, block_b: int = 8,
                      interpret: bool = False) -> jax.Array:
     """Histogram k-WTA over the last axis of (B, D)."""
     b, d = x.shape
-    block_b = min(block_b, b)
-    if b % block_b:
-        raise ValueError(f"B={b} must divide block_b={block_b}")
+    block_b = validate_block("block_b", block_b, b, "B")
     return pl.pallas_call(
         functools.partial(_kernel, k=k),
         grid=(b // block_b,),

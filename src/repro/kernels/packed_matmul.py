@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .block_validation import validate_blocks
+
 
 def _kernel(x_ref, packed_ref, route_ref, o_ref, *, n: int, nk: int):
     k = pl.program_id(2)
@@ -73,12 +75,10 @@ def packed_matmul(x: jax.Array, packed_r: jax.Array, route_r: jax.Array,
     p, g, n = packed_r.shape
     if p * n != d_in:
         raise ValueError(f"x d_in {d_in} != P*N {p * n}")
-    block_b = min(block_b, b)
-    block_p = min(block_p, p)
-    block_g = min(block_g, g)
-    if b % block_b or p % block_p or g % block_g:
-        raise ValueError(f"shapes (B={b}, P={p}, G={g}) must divide blocks "
-                         f"({block_b}, {block_p}, {block_g})")
+    block_b, block_p, block_g = validate_blocks((
+        ("block_b", block_b, b, "B"),
+        ("block_p", block_p, p, "P"),
+        ("block_g", block_g, g, "G")))
     nb, no, nk = b // block_b, g // block_g, p // block_p
     return pl.pallas_call(
         functools.partial(_kernel, n=n, nk=nk),

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .block_validation import validate_block
+
 
 def _kernel(vals_ref, pidx_ref, soff_ref, packed_ref, route_ref, o_ref,
             *, k_nnz: int):
@@ -69,10 +71,9 @@ def topk_gather_matmul(vals: jax.Array, p_idx: jax.Array, s_off: jax.Array,
     if k_nnz < 1:
         raise ValueError(f"k_nnz={k_nnz} must be >= 1 (at least one "
                          "non-zero per row)")
-    if block_g > g:
-        raise ValueError(f"block_g={block_g} exceeds G={g}")
-    if g % block_g:
-        raise ValueError(f"block_g={block_g} must divide G={g}")
+    # Explicit-block convention: an oversized block_g is the caller's error,
+    # not something to clamp away (shared validator, clamp=False).
+    block_g = validate_block("block_g", block_g, g, "G", clamp=False)
     # Grid order (nG, B): batch innermost so the packed/route tiles (index
     # maps ignore ib) are revisited — fetched once per group tile, resident
     # in VMEM for the whole decode batch.

@@ -50,11 +50,12 @@ def _o_proj(params, out_flat, sp: SparsityConfig):
     the CS-packed o-projection — the same one-Select-per-layer pipeline as
     the FFN down projection (paper Fig. 8a applied to §6.4's Transformer
     projections)."""
-    if sp.activation_sparse:
-        out_flat, support = apply_kwta(out_flat, sp, return_support=True)
-        return _proj_apply(params, out_flat, sp, x_is_sparse=True,
-                           support=support)
-    return _proj_apply(params, out_flat, sp)
+    with jax.named_scope("o_proj"):
+        if sp.activation_sparse:
+            out_flat, support = apply_kwta(out_flat, sp, return_support=True)
+            return _proj_apply(params, out_flat, sp, x_is_sparse=True,
+                               support=support)
+        return _proj_apply(params, out_flat, sp)
 
 
 # ---------------------------------------------------------------------------

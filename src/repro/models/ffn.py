@@ -60,14 +60,19 @@ def _apply_one(p, x, sp: SparsityConfig, x_is_sparse=False, support=None):
 
 def ffn_apply(params, x, cfg_sp: SparsityConfig, act: str = "silu"):
     a = _act(act)
-    up = _apply_one(params["up"], x, cfg_sp)
+    with jax.named_scope("ffn_up"):
+        up = _apply_one(params["up"], x, cfg_sp)
     if "gate" in params:
-        h = a(_apply_one(params["gate"], x, cfg_sp)) * up
+        with jax.named_scope("ffn_gate"):
+            h = a(_apply_one(params["gate"], x, cfg_sp)) * up
     else:
         h = a(up)
     h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
     # Select (k-WTA) — identity when disabled. The winner support is handed
     # to the down projection so the sparse-sparse path never re-derives it.
-    h, support = apply_kwta(h, cfg_sp, return_support=True)
-    return _apply_one(params["down"], h, cfg_sp,
-                      x_is_sparse=cfg_sp.activation_sparse, support=support)
+    with jax.named_scope("ffn_kwta"):
+        h, support = apply_kwta(h, cfg_sp, return_support=True)
+    with jax.named_scope("ffn_down"):
+        return _apply_one(params["down"], h, cfg_sp,
+                          x_is_sparse=cfg_sp.activation_sparse,
+                          support=support)

@@ -228,7 +228,8 @@ def forward(params, batch, cfg) -> Tuple[jax.Array, jax.Array]:
                 # block-granular remat: backward holds at most one block's
                 # intermediates (the scan carry is the remat stack)
                 apply = jax.checkpoint(apply)
-            x, a = apply(p, x)
+            with jax.named_scope(f"b{i}_{kind}"):
+                x, a = apply(p, x)
             aux = aux + a
         x = constrain(x, "batch", "seq", None)
         return (x, aux), None
@@ -324,8 +325,9 @@ def prefill(params, batch, cfg, max_seq: int):
         caches = {}
         for i, kind in enumerate(cfg.block_pattern):
             p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
-            x, caches[f"b{i}"] = _block_prefill(kind, p, x, cfg, positions,
-                                                max_seq)
+            with jax.named_scope(f"b{i}_{kind}"):
+                x, caches[f"b{i}"] = _block_prefill(kind, p, x, cfg,
+                                                    positions, max_seq)
         return x, caches
 
     x, cache = lax.scan(unit_fn, x, params["units"])
@@ -362,8 +364,9 @@ def serve_step(params, cache, batch, pos, cfg):
         new_cache = {}
         for i, kind in enumerate(cfg.block_pattern):
             p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
-            x, new_cache[f"b{i}"] = _block_decode(kind, p, x, cfg,
-                                                  unit_cache[f"b{i}"], pos)
+            with jax.named_scope(f"b{i}_{kind}"):
+                x, new_cache[f"b{i}"] = _block_decode(
+                    kind, p, x, cfg, unit_cache[f"b{i}"], pos)
         return x, new_cache
 
     x, new_cache = lax.scan(unit_fn, x, (params["units"], cache))
@@ -382,7 +385,8 @@ def unit_step_fn(cfg):
         aux = jnp.zeros((), jnp.float32)
         for i, kind in enumerate(cfg.block_pattern):
             p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
-            x, a = _block_apply(kind, p, x, cfg, positions)
+            with jax.named_scope(f"b{i}_{kind}"):
+                x, a = _block_apply(kind, p, x, cfg, positions)
             aux += a
         return x, aux
 

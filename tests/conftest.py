@@ -9,3 +9,25 @@ falls back to replication when dims don't divide.
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import pytest
+
+
+@pytest.fixture
+def lint_clean():
+    """Assert a callable stages zero sparsity findings, in one line:
+
+        lint_clean(lambda p, x: ffn_apply(p, x, sp), params, x)
+
+    Arguments may be concrete arrays or ShapeDtypeStructs; lint options
+    (``expected=``, ``check_dense_fallback=``, ...) pass through to
+    :func:`repro.analysis.lint_fn`.  Returns the report for further
+    assertions."""
+    from repro.analysis import lint_fn
+
+    def check(fn, *args, **kwargs):
+        report = lint_fn(fn, *args, **kwargs)
+        assert report.ok, report.render()
+        return report
+
+    return check

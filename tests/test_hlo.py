@@ -1,0 +1,112 @@
+"""launch/hlo.py tests against a checked-in HLO text fixture.
+
+The fixture (tests/fixtures/sample_module.hlo) is a hand-written but
+syntactically faithful HLO module containing: a while loop whose body
+stages an all-reduce, an f8e4m3fn all-gather inside a fusion, a
+reduce-scatter and an async all-gather-start/done pair at top level,
+plus one of each host-transfer shape (send/send-done, a MoveToHost
+custom call, a copy into host memory space S(5)).  Every byte total
+below is computed by hand from the fixture's shapes."""
+
+import os
+
+from repro.analysis import lint_hlo
+from repro.launch.hlo import (collective_bytes, collective_stats,
+                              count_hlo_ops, host_transfer_ops,
+                              parse_computations, while_body_computations)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "sample_module.hlo")
+
+
+def _text():
+    with open(FIXTURE) as f:
+        return f.read()
+
+
+def test_parse_computations_segments_module():
+    comps = parse_computations(_text())
+    assert {"add_f32", "fused_collective", "body.1", "cond.1",
+            "main.42", "ENTRY"} <= set(comps)
+    assert comps["ENTRY"] is comps["main.42"]
+    assert any("while(" in line for line in comps["main.42"])
+    assert any("all-reduce(" in line for line in comps["body.1"])
+
+
+def test_while_body_computations_transitive():
+    in_while = while_body_computations(_text())
+    assert "body.1" in in_while and "cond.1" in in_while
+    # all-reduce's to_apply inside the body is reached transitively
+    assert "add_f32" in in_while
+    # the fusion is called from ENTRY, not from the while body
+    assert "fused_collective" not in in_while
+
+
+def test_collective_bytes_totals_with_f8():
+    stats = collective_bytes(_text())
+    # all-reduce: bf16[2,1024] = 4096 B (the -done-skip rule is N/A here)
+    assert stats["all-reduce_bytes"] == 4096
+    assert stats["all-reduce_count"] == 1
+    # all-gather: f8e4m3fn[4,128] = 512 B (1 B/elt)  +  async
+    # all-gather-start f32[16,256] = 16384 B; the -done twin is skipped.
+    assert stats["all-gather_bytes"] == 512 + 16384
+    assert stats["all-gather_count"] == 2
+    # reduce-scatter: f32[4,256] = 4096 B
+    assert stats["reduce-scatter_bytes"] == 4096
+    assert stats["total_bytes"] == 4096 + 512 + 16384 + 4096
+
+
+def test_collective_stats_while_body_accounting():
+    stats = collective_stats(_text())
+    # flat totals match collective_bytes
+    assert stats["all-reduce_bytes"] == 4096
+    assert stats["all-gather_bytes"] == 512 + 16384
+    # only the all-reduce sits inside the while body (runs once per trip)
+    assert stats["all-reduce_in_while_count"] == 1
+    assert stats["all-reduce_in_while_bytes"] == 4096
+    assert "all-gather_in_while_count" not in stats
+    assert "reduce-scatter_in_while_count" not in stats
+
+
+def test_host_transfer_ops_census():
+    kinds = [k for k, _ in host_transfer_ops(_text())]
+    assert kinds.count("send") == 1
+    assert kinds.count("send-done") == 1
+    assert kinds.count("MoveToHost") == 1
+    assert kinds.count("host-space-copy") == 1
+    assert len(kinds) == 4
+
+
+def test_count_hlo_ops_census():
+    ops = count_hlo_ops(_text())
+    assert ops["while"] == 1
+    assert ops["fusion"] == 1
+
+
+def test_hlo_rule_pack_on_fixture():
+    report = lint_hlo(_text(), entry="decode")
+    assert len(report.by_rule("hlo-host-transfer")) == 4
+    flagged = {f.primitive for f in report.by_rule("hlo-collective")}
+    assert flagged == {"all-reduce", "all-gather", "reduce-scatter"}
+    # the in-while accounting surfaces in the message
+    ar = [f for f in report.by_rule("hlo-collective")
+          if f.primitive == "all-reduce"][0]
+    assert "1 inside while bodies" in ar.message
+    # allowed kinds are not findings
+    report2 = lint_hlo(_text(), entry="decode",
+                       allowed_collectives=("all-reduce", "all-gather",
+                                            "reduce-scatter"))
+    assert report2.by_rule("hlo-collective") == []
+
+
+def test_clean_hlo_reports_nothing():
+    clean = """HloModule jit_step
+
+ENTRY %main.1 (p0.0: f32[8,8]) -> f32[8,8] {
+  %p0.0 = f32[8,8]{1,0} parameter(0)
+  ROOT %r = f32[8,8]{1,0} add(f32[8,8]{1,0} %p0.0, f32[8,8]{1,0} %p0.0)
+}
+"""
+    assert lint_hlo(clean).ok
+    assert host_transfer_ops(clean) == []
+    assert collective_stats(clean) == {}

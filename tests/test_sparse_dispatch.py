@@ -10,10 +10,9 @@ import numpy as np
 import pytest
 
 from repro.core import (CSLayout, SparsityConfig, choose_executor,
-                        cs_topk_from_support, cs_topk_matmul, kwta,
-                        kwta_support, make_routes, pack_dense,
-                        reset_topk_count, routes_to_mask, topk_call_count,
-                        topk_support_flat)
+                        count_selects, cs_topk_from_support, cs_topk_matmul,
+                        kwta, kwta_support, make_routes, pack_dense,
+                        routes_to_mask, topk_support_flat)
 from repro.core.layers import (apply_kwta, packed_linear_apply,
                                packed_linear_init)
 from repro.kernels import (to_partition_major, topk_gather_matmul,
@@ -139,16 +138,17 @@ def test_ffn_issues_exactly_one_topk_per_layer():
     cfg_sp = SparsityConfig(n=4, k_frac=0.125)
     params, _ = ffn_init(jax.random.PRNGKey(0), 64, 256, cfg_sp)
     x = jnp.zeros((2, 1, 64))
-    reset_topk_count()
-    jax.make_jaxpr(lambda x: ffn_apply(params, x, cfg_sp))(x)
-    assert topk_call_count() == 1, (
+    with count_selects() as c:
+        jax.make_jaxpr(lambda x: ffn_apply(params, x, cfg_sp))(x)
+    assert c.top_k == 1, (
         "sparse-sparse FFN must run ONE Select: the k-WTA support is handed "
         "to the down projection instead of re-running top_k")
 
 
-def test_serve_step_issues_one_topk_per_sparse_layer():
+def test_serve_step_issues_one_topk_per_sparse_layer(lint_clean):
     """Decode through the whole transformer: exactly one top_k staged per
     sparse FFN in the scanned superblock (and none anywhere else)."""
+    from repro.analysis import expected_selects
     from repro.configs import get_config
     from repro.models import transformer as T
     cfg = get_config("smollm-360m").reduced(
@@ -160,19 +160,23 @@ def test_serve_step_issues_one_topk_per_sparse_layer():
     batch = {"tokens": jnp.zeros((2, 1), jnp.int32)}
     pos = jnp.zeros((2,), jnp.int32)
     n_sparse_per_unit = sum(k == "attn" for k in cfg.block_pattern)
-    reset_topk_count()
-    jax.make_jaxpr(lambda p, c, b, pos: T.serve_step(p, c, b, pos, cfg))(
-        params, cache, batch, pos)
-    assert topk_call_count() == n_sparse_per_unit
+    with count_selects() as c:
+        jax.make_jaxpr(lambda p, c, b, pos: T.serve_step(p, c, b, pos, cfg))(
+            params, cache, batch, pos)
+    assert c.top_k == n_sparse_per_unit
+    # and the static analyzer agrees, layer by layer
+    lint_clean(lambda p, c, b, q: T.serve_step(p, c, b, q, cfg),
+               params, cache, batch, pos,
+               expected=expected_selects(cfg, n_tokens=2))
 
 
 def test_cs_topk_matmul_without_handoff_still_one_topk():
     """The standalone sparse-sparse matmul runs its own single Select."""
     _, packed, route = make_case(64, 32, 4)
-    reset_topk_count()
-    jax.make_jaxpr(lambda x: cs_topk_matmul(x, packed, route, 8))(
-        jnp.zeros((2, 64)))
-    assert topk_call_count() == 1
+    with count_selects() as c:
+        jax.make_jaxpr(lambda x: cs_topk_matmul(x, packed, route, 8))(
+            jnp.zeros((2, 64)))
+    assert c.top_k == 1
 
 
 def test_kwta_support_matches_kwta():
