@@ -8,6 +8,12 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
   bench_serve         — serving: continuous batching vs static, TTFT
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only gsc,...]
+                                               [--json BENCH_serve.json]
+
+``--json OUT`` additionally writes every collected row to a JSON file
+(``{"rows": [{"name", "us_per_call", ...derived}], "benches": [...]}``)
+— the machine-readable artifact future PRs gate perf on (CI uploads
+``BENCH_serve.json`` from ``--only serve``).
 """
 
 from __future__ import annotations
@@ -23,11 +29,27 @@ def _report(name: str, us_per_call: float, derived=None) -> None:
     print(f"{name},{us_per_call:.2f},{d}", flush=True)
 
 
+class _Collector:
+    """Wraps the CSV reporter; also accumulates rows for ``--json``."""
+
+    def __init__(self):
+        self.rows = []
+
+    def __call__(self, name: str, us_per_call: float, derived=None) -> None:
+        _report(name, us_per_call, derived)
+        row = {"name": name, "us_per_call": round(float(us_per_call), 2)}
+        row.update(derived or {})
+        self.rows.append(row)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: gsc,sparse_matmul,"
                          "resources,kwta,serve")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write collected rows to OUT as JSON "
+                         "(e.g. BENCH_serve.json for the CI artifact)")
     args = ap.parse_args()
     from benchmarks import bench_gsc, bench_kwta, bench_resources, \
         bench_serve, bench_sparse_matmul
@@ -35,14 +57,21 @@ def main() -> None:
             "resources": bench_resources, "kwta": bench_kwta,
             "serve": bench_serve}
     sel = (args.only.split(",") if args.only else list(mods))
+    report = _Collector()
     print("name,us_per_call,derived")
     failed = []
     for name in sel:
         try:
-            mods[name].run(_report)
+            mods[name].run(report)
         except Exception:  # noqa: BLE001 — report and continue
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benches": [n for n in sel if n not in failed],
+                       "failed": failed, "rows": report.rows}, f, indent=2)
+        print(f"wrote {len(report.rows)} rows to {args.json}",
+              file=sys.stderr)
     if failed:
         print(f"FAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -21,20 +21,24 @@ waive a finding.
 
 from .findings import SEVERITIES, Finding, Report
 from .hlo_rules import rule_hlo_collectives, rule_hlo_host_transfer
+from .intervals import AbsVal, Interval, Sym
 from .jaxpr_walk import iter_eqns, propagate_taint, sub_jaxprs
+from .kernel_rules import (register_value_ranges, rule_kernel_body,
+                           verify_pallas_eqn)
 from .lint import (ENTRIES, expected_selects, family_path, family_selects,
                    lint_config, lint_fn, lint_hlo, lint_kernel_pipeline,
-                   seeded_regressions, self_test)
+                   lint_kernels, seeded_regressions, self_test)
 from .rules import (SELECT_PRIMS, layer_key, rule_dense_fallback,
                     rule_dtype_promotion, rule_pallas_resource,
                     rule_select_count)
 
 __all__ = [
-    "ENTRIES", "Finding", "Report", "SELECT_PRIMS", "SEVERITIES",
-    "expected_selects", "family_path", "family_selects", "iter_eqns",
-    "layer_key", "lint_config", "lint_fn", "lint_hlo",
-    "lint_kernel_pipeline", "propagate_taint", "rule_dense_fallback",
-    "rule_dtype_promotion", "rule_hlo_collectives",
-    "rule_hlo_host_transfer", "rule_pallas_resource", "rule_select_count",
-    "seeded_regressions", "self_test", "sub_jaxprs",
+    "AbsVal", "ENTRIES", "Finding", "Interval", "Report", "SELECT_PRIMS",
+    "SEVERITIES", "Sym", "expected_selects", "family_path",
+    "family_selects", "iter_eqns", "layer_key", "lint_config", "lint_fn",
+    "lint_hlo", "lint_kernel_pipeline", "lint_kernels", "propagate_taint",
+    "register_value_ranges", "rule_dense_fallback", "rule_dtype_promotion",
+    "rule_hlo_collectives", "rule_hlo_host_transfer", "rule_kernel_body",
+    "rule_pallas_resource", "rule_select_count", "seeded_regressions",
+    "self_test", "sub_jaxprs", "verify_pallas_eqn",
 ]

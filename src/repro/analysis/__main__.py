@@ -1,7 +1,13 @@
 """CLI: lint a named config's entrypoints for sparsity invariants.
 
     python -m repro.analysis --config smollm_360m --fail-on-findings
+    python -m repro.analysis --kernels --fail-on-findings
     python -m repro.analysis --self-test          # CI negative test
+
+``--kernels`` sweeps the Pallas kernel registry and runs the
+kernel-body verifier (bounds, race, masking, scratch proofs) over every
+shipped kernel at every declared shape configuration; it composes with
+``--config`` (both reports merge into one exit status).
 
 Exit codes: 0 clean (or all seeded regressions caught under
 ``--self-test``); 1 findings present (or a regression slipped through);
@@ -23,6 +29,11 @@ def build_parser() -> argparse.ArgumentParser:
                     "decode stays on-device).")
     p.add_argument("--config", help="architecture config name "
                    "(e.g. smollm_360m); see repro.configs.list_archs()")
+    p.add_argument("--kernels", action="store_true",
+                   help="sweep the Pallas kernel registry with the "
+                   "kernel-body verifier (oob-access, grid-race, "
+                   "unmasked-pad, scratch-overflow) across all declared "
+                   "shape configs")
     p.add_argument("--entries", default="decode,prefill,kernel,train",
                    help="comma-separated entrypoints to lint "
                    "(default: all)")
@@ -54,7 +65,8 @@ def build_parser() -> argparse.ArgumentParser:
                    help="run the seeded regressions and exit 0 only if "
                    "the linter catches all of them")
     p.add_argument("--seed-regression", metavar="NAME",
-                   choices=["double-topk", "f64-kernel"],
+                   choices=["double-topk", "f64-kernel", "oob-gather",
+                            "missing-init"],
                    help="lint the named deliberately-broken pipeline and "
                    "exit by its findings (demonstrates the non-zero exit)")
     return p
@@ -62,7 +74,8 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
-    from repro.analysis import lint_config, seeded_regressions, self_test
+    from repro.analysis import (lint_config, lint_kernels,
+                                seeded_regressions, self_test)
 
     if args.seed_regression:
         report = seeded_regressions()[args.seed_regression]()
@@ -78,17 +91,23 @@ def main(argv=None) -> int:
         print("self-test: all seeded regressions caught")
         return 0
 
-    if not args.config:
-        print("error: --config is required (or use --self-test)",
-              file=sys.stderr)
+    if not (args.config or args.kernels):
+        print("error: --config and/or --kernels is required "
+              "(or use --self-test)", file=sys.stderr)
         return 2
 
-    entries = tuple(e.strip() for e in args.entries.split(",") if e.strip())
-    mode = None if args.use_pallas == "config" else args.use_pallas
-    report = lint_config(
-        args.config, entries=entries, use_pallas=mode, slots=args.slots,
-        seq=args.seq, reduced=args.reduced, check_hlo=not args.no_hlo,
-        waivers=tuple(args.waive))
+    from repro.analysis import Report
+    report = Report()
+    if args.kernels:
+        report.extend(lint_kernels(waivers=tuple(args.waive)))
+    if args.config:
+        entries = tuple(e.strip() for e in args.entries.split(",")
+                        if e.strip())
+        mode = None if args.use_pallas == "config" else args.use_pallas
+        report.extend(lint_config(
+            args.config, entries=entries, use_pallas=mode, slots=args.slots,
+            seq=args.seq, reduced=args.reduced, check_hlo=not args.no_hlo,
+            waivers=tuple(args.waive)))
     print(report.to_json() if args.json else report.render())
     return 0 if report.ok else 1
 

@@ -1,0 +1,238 @@
+"""Interval / affine abstract domain for the kernel-body verifier.
+
+The verifier (:mod:`repro.analysis.kernel_rules`) runs an abstract
+interpreter over staged Pallas kernel jaxprs.  Its values live in the
+domain implemented here:
+
+* :class:`Interval` — a closed integer/float interval ``[lo, hi]``
+  (``±inf`` allowed), with sound arithmetic.
+* :class:`Sym` — an opaque symbol with a known range: one per
+  ``pl.program_id`` axis (range ``[0, grid[axis])``), one per scan
+  iteration counter (range ``[0, length)``), one per widened loop carry.
+* :class:`AbsVal` — an affine combination ``Σ coeff·sym + base`` where
+  ``base`` is an :class:`Interval`.  The affine part is what lets the
+  analysis prove ``fori_loop`` induction bounds exactly (``q = iter``
+  with ``iter ∈ [0, k_nnz)``) instead of widening to ``±inf``; anything
+  non-affine falls back to the pure interval.
+
+Besides the numeric abstraction, an :class:`AbsVal` carries two taint
+sets used by the rules:
+
+* ``reads`` — which kernel Refs the value was (transitively) loaded
+  from; a store whose value read the same Ref is a read-modify-write
+  (the ``grid-race`` accumulation discipline).
+* ``pad`` — which Refs with a *partial trailing block* the value was
+  loaded from without passing through a mask; a ``select_n`` whose
+  predicate is pad-clean launders it (the ``unmasked-pad`` rule).
+
+and an optional ``pred`` annotation recognizing the ``program_id(axis)
+== 0`` predicates that guard init stores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, FrozenSet, Optional, Tuple
+
+NEG_INF = float("-inf")
+POS_INF = float("inf")
+
+_sym_counter = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """A closed interval [lo, hi]; lo/hi may be ±inf."""
+
+    lo: float
+    hi: float
+
+    @staticmethod
+    def const(c) -> "Interval":
+        c = float(c)
+        return Interval(c, c)
+
+    @staticmethod
+    def top() -> "Interval":
+        return Interval(NEG_INF, POS_INF)
+
+    @property
+    def is_top(self) -> bool:
+        return self.lo == NEG_INF and self.hi == POS_INF
+
+    @property
+    def is_point(self) -> bool:
+        return self.lo == self.hi and self.lo not in (NEG_INF, POS_INF)
+
+    def __add__(self, o: "Interval") -> "Interval":
+        return Interval(self.lo + o.lo, self.hi + o.hi)
+
+    def __sub__(self, o: "Interval") -> "Interval":
+        return Interval(self.lo - o.hi, self.hi - o.lo)
+
+    def __mul__(self, o: "Interval") -> "Interval":
+        cands = [_mul(a, b) for a in (self.lo, self.hi)
+                 for b in (o.lo, o.hi)]
+        return Interval(min(cands), max(cands))
+
+    def join(self, o: "Interval") -> "Interval":
+        return Interval(min(self.lo, o.lo), max(self.hi, o.hi))
+
+    def meet(self, o: "Interval") -> "Interval":
+        return Interval(max(self.lo, o.lo), min(self.hi, o.hi))
+
+    def scale(self, k: float) -> "Interval":
+        a, b = _mul(self.lo, k), _mul(self.hi, k)
+        return Interval(min(a, b), max(a, b))
+
+    def floordiv(self, k: float) -> "Interval":
+        if k <= 0:
+            return Interval.top()
+        lo = self.lo // k if self.lo not in (NEG_INF, POS_INF) else self.lo
+        hi = self.hi // k if self.hi not in (NEG_INF, POS_INF) else self.hi
+        return Interval(lo, hi)
+
+    def render(self) -> str:
+        def f(v):
+            if v == NEG_INF:
+                return "-inf"
+            if v == POS_INF:
+                return "inf"
+            return str(int(v)) if float(v).is_integer() else f"{v:g}"
+        return f"[{f(self.lo)}, {f(self.hi)}]"
+
+
+def _mul(a: float, b: float) -> float:
+    # inf * 0 -> 0 (sound for interval corners: the 0-extreme dominates)
+    if a == 0 or b == 0:
+        return 0.0
+    return a * b
+
+
+TOP = Interval.top()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Sym:
+    """An opaque symbolic quantity with a known range.
+
+    ``kind`` is ``"pid"`` (a grid index; ``axis`` set), ``"iter"`` (a
+    scan/loop iteration counter) or ``"carry"`` (a widened loop carry).
+    Identity is object identity — two symbols never alias.
+    """
+
+    name: str
+    range: Interval
+    kind: str = "opaque"
+    axis: Optional[int] = None
+
+    @staticmethod
+    def fresh(name: str, rng: Interval, kind: str = "opaque",
+              axis: Optional[int] = None) -> "Sym":
+        return Sym(f"{name}#{next(_sym_counter)}", rng, kind, axis)
+
+
+#: Predicate annotation: ("pid_eq0", axis) — ``program_id(axis) == 0``.
+Pred = Tuple[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class AbsVal:
+    """Abstract value: affine form + taint metadata.
+
+    ``terms`` maps :class:`Sym` -> integer coefficient; the concrete
+    value lies in ``base + Σ coeff · sym.range``.  An empty ``terms``
+    is a plain interval.
+    """
+
+    base: Interval = TOP
+    terms: Tuple[Tuple[Sym, float], ...] = ()
+    reads: FrozenSet[int] = frozenset()
+    pad: FrozenSet[int] = frozenset()
+    pred: Optional[Pred] = None
+
+    # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def const(c) -> "AbsVal":
+        return AbsVal(base=Interval.const(c))
+
+    @staticmethod
+    def interval(lo, hi, **meta) -> "AbsVal":
+        return AbsVal(base=Interval(float(lo), float(hi)), **meta)
+
+    @staticmethod
+    def top(**meta) -> "AbsVal":
+        return AbsVal(base=TOP, **meta)
+
+    @staticmethod
+    def of_sym(sym: Sym) -> "AbsVal":
+        return AbsVal(base=Interval.const(0), terms=((sym, 1.0),))
+
+    # -- interrogation ------------------------------------------------------
+
+    def iv(self) -> Interval:
+        """Concretize to an interval."""
+        out = self.base
+        for sym, coeff in self.terms:
+            out = out + sym.range.scale(coeff)
+        return out
+
+    @property
+    def is_const(self) -> bool:
+        return not self.terms and self.base.is_point
+
+    def term_map(self) -> Dict[Sym, float]:
+        return dict(self.terms)
+
+    def meta(self, *others: "AbsVal") -> dict:
+        reads = self.reads
+        pad = self.pad
+        for o in others:
+            reads = reads | o.reads
+            pad = pad | o.pad
+        return {"reads": reads, "pad": pad}
+
+    def with_meta(self, **meta) -> "AbsVal":
+        return dataclasses.replace(self, pred=None, **meta)
+
+    # -- arithmetic ---------------------------------------------------------
+
+    def add(self, o: "AbsVal") -> "AbsVal":
+        terms = self.term_map()
+        for sym, coeff in o.terms:
+            terms[sym] = terms.get(sym, 0.0) + coeff
+        terms = tuple((s, c) for s, c in terms.items() if c != 0.0)
+        return AbsVal(base=self.base + o.base, terms=terms, **self.meta(o))
+
+    def neg(self) -> "AbsVal":
+        return AbsVal(base=Interval(-self.base.hi, -self.base.lo),
+                      terms=tuple((s, -c) for s, c in self.terms),
+                      reads=self.reads, pad=self.pad)
+
+    def sub(self, o: "AbsVal") -> "AbsVal":
+        r = self.add(o.neg())
+        return dataclasses.replace(r, **self.meta(o))
+
+    def mul(self, o: "AbsVal") -> "AbsVal":
+        if not o.terms and o.base.is_point:
+            k = o.base.lo
+            return AbsVal(base=self.base.scale(k),
+                          terms=tuple((s, c * k) for s, c in self.terms
+                                      if c * k != 0.0),
+                          **self.meta(o))
+        if not self.terms and self.base.is_point:
+            return o.mul(self)
+        return AbsVal(base=self.iv() * o.iv(), **self.meta(o))
+
+    def join(self, o: "AbsVal") -> "AbsVal":
+        if self.terms == o.terms:
+            return AbsVal(base=self.base.join(o.base), terms=self.terms,
+                          **self.meta(o))
+        return AbsVal(base=self.iv().join(o.iv()), **self.meta(o))
+
+    def render(self) -> str:
+        parts = [f"{c:g}*{s.name}" for s, c in self.terms]
+        parts.append(self.base.render())
+        return " + ".join(parts)

@@ -16,8 +16,14 @@ Library API
   :func:`repro.core.layers.packed_linear_apply` to predict how many
   ``top_k`` primitives each sparse layer should stage (paper Fig. 8a:
   at most one per layer).
+* :func:`lint_kernels` — sweep the Pallas kernel registry
+  (:mod:`repro.kernels.registry`) and run the kernel-body verifier
+  (:mod:`repro.analysis.kernel_rules`) plus the resource rule over every
+  shipped kernel at every declared shape configuration (the CLI
+  ``--kernels`` path).
 * :func:`seeded_regressions` — deliberately broken pipelines (a doubled
-  Select; an f64 kernel input) used by the CLI ``--self-test`` and the
+  Select; an f64 kernel input; an off-by-one ``pl.ds`` gather; a missing
+  ``pl.when`` accumulation init) used by the CLI ``--self-test`` and the
   test suite to prove the linter catches what it claims to.
 """
 
@@ -129,6 +135,7 @@ def lint_fn(fn: Callable, *example_args,
             check_dense_fallback: bool = False,
             check_dtype: bool = True,
             check_pallas: bool = True,
+            check_kernel_body: bool = True,
             backend: str = "tpu",
             waivers: Sequence[str] = (),
             **example_kwargs) -> Report:
@@ -149,6 +156,10 @@ def lint_fn(fn: Callable, *example_args,
         report.add(rule_dtype_promotion(closed, entry), waivers)
     if check_pallas:
         report.add(rule_pallas_resource(closed, entry, backend), waivers)
+    if check_kernel_body:
+        from .kernel_rules import rule_kernel_body
+        report.add(rule_kernel_body(closed, entry=entry, backend=backend),
+                   waivers)
     return report
 
 
@@ -300,6 +311,34 @@ def lint_kernel_pipeline(sp: SparsityConfig, n_tokens: int, d_in: int,
 
 
 # ---------------------------------------------------------------------------
+# lint_kernels: sweep the Pallas kernel registry
+# ---------------------------------------------------------------------------
+
+def lint_kernels(backend: str = "tpu",
+                 waivers: Sequence[str] = ()) -> Report:
+    """Verify every registered Pallas kernel at every declared shape.
+
+    Stages each :func:`repro.kernels.registry.kernel_cases` entry
+    abstractly and runs the kernel-body rule families (``oob-access``,
+    ``grid-race``, ``unmasked-pad``, ``scratch-overflow``) plus the
+    outer ``pallas-resource`` rule over it — the CLI ``--kernels`` /
+    CI sweep."""
+    from repro.kernels.registry import kernel_cases
+
+    from .kernel_rules import rule_kernel_body
+
+    report = Report()
+    for case in kernel_cases():
+        entry = f"kernels:{case.label}"
+        closed = case.trace()
+        report.entries.append(entry)
+        report.add(rule_kernel_body(closed, entry=entry, backend=backend),
+                   waivers)
+        report.add(rule_pallas_resource(closed, entry, backend), waivers)
+    return report
+
+
+# ---------------------------------------------------------------------------
 # Seeded regressions (CLI --self-test; tests/test_analysis.py)
 # ---------------------------------------------------------------------------
 
@@ -357,23 +396,115 @@ def _regression_f64_kernel() -> Report:
                        check_select=False, check_pallas=False)
 
 
+def _regression_oob_gather() -> Report:
+    """The off-by-one ``pl.ds`` gather: the ``fori_loop`` body fetches
+    packed row ``p + 1`` — one past the declared ``[0, P)`` provenance
+    range of ``p_idx``, so the last partition reads out of bounds."""
+    import functools
+
+    from jax import lax
+    from jax.experimental import pallas as pl
+
+    from .intervals import Interval
+    from .kernel_rules import register_value_ranges
+
+    b, k, p, g, n = 2, 8, 16, 4, 4
+
+    def _oob_gather_kernel(vals_ref, pidx_ref, packed_ref, o_ref, *, k_nnz):
+        vals, pidx = vals_ref[0], pidx_ref[0]
+        bg, nn = packed_ref.shape[1], packed_ref.shape[2]
+
+        def body(j, acc):
+            # BUG under test: rows are fetched at p + 1, sailing one past
+            # the end of the packed partition dim when p == P - 1.
+            w = packed_ref[pl.ds(pidx[j] + 1, 1), :, :][0]
+            return acc + w * vals[j]
+
+        acc = lax.fori_loop(0, k_nnz, body, jnp.zeros((bg, nn), jnp.float32))
+        o_ref[0] = acc.reshape(bg * nn)
+
+    # same provenance the real topk_gather kernel declares: p_idx ∈ [0, P)
+    register_value_ranges(
+        "_oob_gather_kernel",
+        lambda refs: {1: Interval(0, refs[2].block_shape[0] - 1)})
+
+    def bad(vals, pidx, packed):
+        return pl.pallas_call(
+            functools.partial(_oob_gather_kernel, k_nnz=k),
+            grid=(1, b),
+            in_specs=[pl.BlockSpec((1, k), lambda ig, ib: (ib, 0)),
+                      pl.BlockSpec((1, k), lambda ig, ib: (ib, 0)),
+                      pl.BlockSpec((p, g, n), lambda ig, ib: (0, 0, 0))],
+            out_specs=pl.BlockSpec((1, g * n), lambda ig, ib: (ib, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, g * n), jnp.float32),
+        )(vals, pidx, packed)
+
+    return lint_fn(bad, _sds((b, k), jnp.float32), _sds((b, k), jnp.int32),
+                   _sds((p, g, n), jnp.float32), entry="kernel",
+                   check_select=False)
+
+
+def _regression_missing_init() -> Report:
+    """A grouped accumulation kernel whose ``pl.when(k == 0)`` zero-store
+    was dropped: the ``+=`` reads uninitialized VMEM on the first visit
+    of every revisited output block."""
+    from jax.experimental import pallas as pl
+
+    def _missing_init_kernel(x_ref, w_ref, o_ref):
+        # BUG under test: no @pl.when(pl.program_id(3) == 0) init before
+        # the read-modify-write on the k-revisited output block.
+        o_ref[0] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    def bad(xg, packed):
+        return pl.pallas_call(
+            _missing_init_kernel,
+            grid=(2, 1, 1, 2),
+            in_specs=[
+                pl.BlockSpec((1, 8, 8), lambda s, ib, ig, ik: (s, ib, ik)),
+                pl.BlockSpec((1, 8, 8), lambda s, ib, ig, ik: (s, ik, ig)),
+            ],
+            out_specs=pl.BlockSpec((1, 8, 8),
+                                   lambda s, ib, ig, ik: (s, ib, ig)),
+            out_shape=jax.ShapeDtypeStruct((2, 8, 8), jnp.float32),
+        )(xg, packed)
+
+    return lint_fn(bad, _sds((2, 8, 16), jnp.float32),
+                   _sds((2, 16, 8), jnp.float32), entry="kernel",
+                   check_select=False)
+
+
 def seeded_regressions() -> Dict[str, Callable[[], Report]]:
     """Named deliberately-broken pipelines the linter must flag."""
     return {"double-topk": _regression_double_topk,
-            "f64-kernel": _regression_f64_kernel}
+            "f64-kernel": _regression_f64_kernel,
+            "oob-gather": _regression_oob_gather,
+            "missing-init": _regression_missing_init}
 
 
 def self_test() -> List[str]:
     """Run every seeded regression; return failure descriptions (empty
     when the linter caught all of them — the CI negative test)."""
     expect_rule = {"double-topk": "select-count",
-                   "f64-kernel": "dtype-promotion"}
+                   "f64-kernel": "dtype-promotion",
+                   "oob-gather": "oob-access",
+                   "missing-init": "grid-race"}
+    # kernel-body findings must name the kernel AND the offending Ref
+    expect_text = {"oob-gather": ("_oob_gather_kernel", "in[2]"),
+                   "missing-init": ("_missing_init_kernel", "out[2]")}
     failures = []
     for name, run in seeded_regressions().items():
         report = run()
         rule = expect_rule[name]
-        if not report.by_rule(rule):
+        hits = report.by_rule(rule)
+        if not hits:
             failures.append(
                 f"seeded regression {name!r} was NOT caught (expected a "
                 f"{rule} finding; got: {report.render()})")
+            continue
+        for needle in expect_text.get(name, ()):
+            if not any(needle in f.message for f in hits):
+                failures.append(
+                    f"seeded regression {name!r}: the {rule} finding does "
+                    f"not name {needle!r} (got: {hits[0].message})")
     return failures

@@ -26,6 +26,7 @@ from .kwta_hist import kwta_hist_pallas
 from .ops import (grouped_cs_matmul_op, kwta_hist_op, packed_matmul_op,
                   topk_gather_op, topk_gather_support_op)
 from .packed_matmul import packed_matmul, to_partition_major
+from .registry import KernelCase, kernel_cases
 from .topk_gather import topk_gather_matmul, topk_support
 
 __all__ = [
@@ -33,7 +34,7 @@ __all__ = [
     "slot_major_packed", "kwta_hist_pallas", "grouped_cs_matmul_op",
     "kwta_hist_op", "packed_matmul_op", "topk_gather_op",
     "topk_gather_support_op", "packed_matmul", "to_partition_major",
-    "topk_gather_matmul", "topk_support",
+    "topk_gather_matmul", "topk_support", "KernelCase", "kernel_cases",
     "check_block_shape", "estimate_vmem_bytes", "validate_block",
     "validate_blocks", "vmem_budget",
 ]

@@ -28,7 +28,7 @@ from jax.experimental import pallas as pl
 from .block_validation import validate_blocks
 
 
-def _kernel(x_ref, w_ref, o_ref):
+def _grouped_cs_kernel(x_ref, w_ref, o_ref):
     k = pl.program_id(3)
 
     @pl.when(k == 0)
@@ -65,7 +65,7 @@ def grouped_cs_matmul(xg: jax.Array, packed: jax.Array,
         ("block_g", block_g, g, "G")))
     grid = (n, b // block_b, g // block_g, p // block_p)
     return pl.pallas_call(
-        _kernel,
+        _grouped_cs_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_b, block_p),

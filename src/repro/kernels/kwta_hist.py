@@ -42,7 +42,7 @@ def _count_ge(q, lo_bin, width, base_mask):
     return jnp.stack(counts, axis=-1)  # (B, 16)
 
 
-def _kernel(x_ref, o_ref, *, k: int):
+def _kwta_hist_kernel(x_ref, o_ref, *, k: int):
     x = x_ref[...].astype(jnp.float32)            # (bb, D)
     d = x.shape[-1]
     lo = jnp.min(x, axis=-1, keepdims=True)
@@ -78,7 +78,7 @@ def kwta_hist_pallas(x: jax.Array, k: int, block_b: int = 8,
     b, d = x.shape
     block_b = validate_block("block_b", block_b, b, "B")
     return pl.pallas_call(
-        functools.partial(_kernel, k=k),
+        functools.partial(_kwta_hist_kernel, k=k),
         grid=(b // block_b,),
         in_specs=[pl.BlockSpec((block_b, d), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),

@@ -35,7 +35,8 @@ from jax.experimental import pallas as pl
 from .block_validation import validate_blocks
 
 
-def _kernel(x_ref, packed_ref, route_ref, o_ref, *, n: int, nk: int):
+def _packed_matmul_kernel(x_ref, packed_ref, route_ref, o_ref,
+                          *, n: int, nk: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -81,7 +82,7 @@ def packed_matmul(x: jax.Array, packed_r: jax.Array, route_r: jax.Array,
         ("block_g", block_g, g, "G")))
     nb, no, nk = b // block_b, g // block_g, p // block_p
     return pl.pallas_call(
-        functools.partial(_kernel, n=n, nk=nk),
+        functools.partial(_packed_matmul_kernel, n=n, nk=nk),
         grid=(nb, no, nk),
         in_specs=[
             pl.BlockSpec((block_b, block_p * n), lambda ib, io, ik: (ib, ik)),

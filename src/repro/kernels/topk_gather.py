@@ -39,7 +39,7 @@ from jax.experimental import pallas as pl
 from .block_validation import validate_block
 
 
-def _kernel(vals_ref, pidx_ref, soff_ref, packed_ref, route_ref, o_ref,
+def _topk_gather_kernel(vals_ref, pidx_ref, soff_ref, packed_ref, route_ref, o_ref,
             *, k_nnz: int):
     vals = vals_ref[0]            # (K,)
     pidx = pidx_ref[0]            # (K,)
@@ -78,7 +78,7 @@ def topk_gather_matmul(vals: jax.Array, p_idx: jax.Array, s_off: jax.Array,
     # maps ignore ib) are revisited — fetched once per group tile, resident
     # in VMEM for the whole decode batch.
     return pl.pallas_call(
-        functools.partial(_kernel, k_nnz=k_nnz),
+        functools.partial(_topk_gather_kernel, k_nnz=k_nnz),
         grid=(g // block_g, b),
         in_specs=[
             pl.BlockSpec((1, k_nnz), lambda ig, ib: (ib, 0)),

@@ -1,14 +1,27 @@
 """Print roofline terms for specific dry-run result keys (hillclimb
-helper): PYTHONPATH=src python -m repro.launch.rooftool KEY [KEY...]"""
+helper):
 
+    PYTHONPATH=src python -m repro.launch.rooftool KEY [KEY...] \\
+        [--results experiments/dryrun_results.json]
+"""
+
+import argparse
 import json
+import os
 import sys
 
 from repro.configs import get_config
 from repro.launch.roofline import cell_roofline
 
+DEFAULT_RESULTS = "experiments/dryrun_results.json"
+
 
 def show(path, keys):
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"rooftool: results file {path!r} not found — run the dry-run "
+            f"sweep first (python -m repro.launch.dryrun) or point "
+            f"--results at an existing sweep output")
     with open(path) as f:
         results = json.load(f)
     for key in keys:
@@ -46,5 +59,19 @@ def show_one(key, rec):
           f"MFU@bound={rl.get('mfu_at_bound',0)*100:.2f}%")
 
 
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.launch.rooftool",
+        description="Print roofline terms for dry-run result keys "
+                    "(prefix match).")
+    p.add_argument("keys", nargs="+", metavar="KEY",
+                   help="result key or key prefix (e.g. 'smollm_360m|')")
+    p.add_argument("--results", default=DEFAULT_RESULTS, metavar="PATH",
+                   help=f"dry-run results JSON (default: {DEFAULT_RESULTS})")
+    args = p.parse_args(argv)
+    show(args.results, args.keys)
+    return 0
+
+
 if __name__ == "__main__":
-    show("experiments/dryrun_results.json", sys.argv[1:])
+    sys.exit(main())
