@@ -12,6 +12,7 @@ Usage: PYTHONPATH=src python -m benchmarks.run --only serve
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -20,6 +21,8 @@ from repro.configs import get_config
 from repro.core.api import DENSE, SparsityConfig
 from repro.launch.mesh import make_mesh
 from repro.launch.serve import Engine
+from repro.obs import Telemetry
+from repro.obs.export import latency_columns, sparsity_columns
 from repro.runtime.scheduler import Request
 
 PROMPT_LEN = 16
@@ -32,13 +35,13 @@ VARIANTS = [
 ]
 
 
-def _mk_engine(sparsity, n_slots, use_pallas=None):
+def _mk_engine(sparsity, n_slots, use_pallas=None, telemetry=None):
     cfg = get_config("smollm-360m").reduced(
         d_model=128, d_ff=512, vocab_size=512, n_heads=4, n_kv_heads=2,
         head_pad=0, ffn_sparsity=sparsity)
     mesh = make_mesh((1, 1), ("data", "model"))
     return Engine(cfg, mesh, max_seq=PROMPT_LEN + GEN + 1, n_slots=n_slots,
-                  use_pallas=use_pallas)
+                  use_pallas=use_pallas, telemetry=telemetry)
 
 
 def _requests(engine, n, gen=GEN):
@@ -107,6 +110,43 @@ def run(report):
             "continuous_tok_s": round(tps, 1),
             "continuous_ttft_ms": round(ttft * 1e3, 1),
         })
+    # -- telemetry overhead + schema-v2 latency/sparsity columns ------------
+    # Telemetry-off rows above stay the trajectory baseline; this pass
+    # re-runs the sparse-sparse continuous bench with full telemetry
+    # (tracing, lifecycle records, realized-sparsity probe every 8 steps)
+    # and reports overhead_pct against a telemetry-off engine.  Both
+    # engines are fully warmed (the probed decode jit compiles on step 0,
+    # the plain one on step 1+) and the runs are interleaved best-of-3 —
+    # single short CPU runs are noisier than the overhead being measured.
+    # The JSONL event log lands wherever REPRO_TELEMETRY_JSONL points
+    # (CI's telemetry-smoke step validates it).
+    off_eng = _mk_engine(VARIANTS[2][1], n_slots=4)
+    off_eng.serve(_requests(off_eng, 1, gen=6))
+    tel = Telemetry.on(jsonl_path=os.environ.get("REPRO_TELEMETRY_JSONL"),
+                       sparsity_every=8)
+    on_eng = _mk_engine(VARIANTS[2][1], n_slots=4, telemetry=tel)
+    on_eng.serve(_requests(on_eng, 1, gen=6))
+    tel.registry.reset()  # drop compile-laden warm-up from the percentiles
+
+    def _tps(engine):
+        out, stats = engine.serve(_requests(engine, 8))
+        return sum(len(v) for v in out.values()) / stats["wall_s"]
+
+    off_best, on_best = 0.0, 0.0
+    for _ in range(3):
+        off_best = max(off_best, _tps(off_eng))
+        on_best = max(on_best, _tps(on_eng))
+    snap = on_eng.metrics_snapshot()
+    tel.close()
+    row = {
+        "telemetry_off_tok_s": round(off_best, 1),
+        "telemetry_on_tok_s": round(on_best, 1),
+        "telemetry_overhead_pct": round(
+            100.0 * (1.0 - on_best / off_best), 1),
+    }
+    row.update(latency_columns(snap))
+    row.update(sparsity_columns(snap))
+    report("serve_sparse_sparse_telemetry_batch4", 0.0, row)
 
 
 if __name__ == "__main__":

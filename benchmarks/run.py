@@ -11,9 +11,11 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--only gsc,...]
                                                [--json BENCH_serve.json]
 
 ``--json OUT`` additionally writes every collected row to a JSON file
-(``{"rows": [{"name", "us_per_call", ...derived}], "benches": [...]}``)
-— the machine-readable artifact future PRs gate perf on (CI uploads
-``BENCH_serve.json`` from ``--only serve``).
+(``{"schema_version", "rows": [{"name", "us_per_call", ...derived}],
+"benches": [...]}``) — the machine-readable artifact future PRs gate perf
+on (CI uploads ``BENCH_serve.json`` from ``--only serve``).  Schema v2
+adds TTFT/ITL percentile and realized-sparsity columns to the serve
+telemetry row (see repro.obs.export).
 """
 
 from __future__ import annotations
@@ -67,8 +69,10 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
     if args.json:
+        from repro.obs.export import SCHEMA_VERSION
         with open(args.json, "w") as f:
-            json.dump({"benches": [n for n in sel if n not in failed],
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "benches": [n for n in sel if n not in failed],
                        "failed": failed, "rows": report.rows}, f, indent=2)
         print(f"wrote {len(report.rows)} rows to {args.json}",
               file=sys.stderr)

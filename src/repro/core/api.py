@@ -20,8 +20,10 @@ batched sparse-sparse kernel.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Literal, Optional
+import threading
+from typing import Callable, Dict, Iterator, Literal, Optional
 
 Path = Literal["auto", "hadamard", "dense", "topk"]
 
@@ -112,6 +114,48 @@ def choose_executor(cfg: SparsityConfig) -> Executor:
     if cfg.use_pallas == "force":
         return Executor(use_pallas=True, interpret=not on_tpu)
     return Executor(use_pallas=on_tpu, interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch observation (runtime telemetry, repro.obs)
+# ---------------------------------------------------------------------------
+
+class _DispatchObs(threading.local):
+    def __init__(self) -> None:
+        self.stack: list = []
+
+
+_DISPATCH_OBS = _DispatchObs()
+
+
+@contextlib.contextmanager
+def observe_dispatch(cb: Callable[[Dict], None]) -> Iterator[None]:
+    """Register a *trace-time* observer of CS-layer dispatch decisions.
+
+    While active (on this thread), every ``packed_linear_apply`` staged
+    reports one event dict — ``{"path", "pallas", "interpret", "batch",
+    "d_in", "d_out", "n", "k"}`` — describing which execution path and
+    backend the layer chose.  Observation happens at trace time only:
+    nothing is staged into the computation, and with no observer the
+    notify below is a single thread-local list check.
+    """
+    _DISPATCH_OBS.stack.append(cb)
+    try:
+        yield
+    finally:
+        _DISPATCH_OBS.stack.remove(cb)
+
+
+def dispatch_observed() -> bool:
+    """True when a dispatch observer is active on this thread (callers
+    skip building the event dict otherwise)."""
+    return bool(_DISPATCH_OBS.stack)
+
+
+def notify_dispatch(event: Dict) -> None:
+    """Deliver a dispatch event to the active observers (if any)."""
+    for cb in _DISPATCH_OBS.stack:
+        cb(event)
 
 
 def choose_path(cfg: SparsityConfig, batch: int, d_in: int,

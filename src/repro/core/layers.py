@@ -22,8 +22,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import sparsity as obs_sparsity
+
 from . import functional as F
-from .api import SparsityConfig, choose_executor, choose_path
+from .api import (SparsityConfig, choose_executor, choose_path,
+                  dispatch_observed, notify_dispatch)
 from .kwta import kwta, kwta_bisect, kwta_hist, kwta_local, kwta_support
 from .masks import CSLayout, make_routes
 from .packing import pack_dense
@@ -147,6 +150,16 @@ def packed_linear_apply(params, x, cfg: SparsityConfig,
         x = jnp.pad(x, pad)
     batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
     path = choose_path(cfg, batch, d_in, x_is_sparse)
+    if dispatch_observed():
+        # Trace-time dispatch telemetry (repro.obs): which path/backend
+        # this layer application staged.  Pure Python — nothing lands in
+        # the jaxpr.
+        ex = choose_executor(cfg) if path == "topk" else None
+        notify_dispatch({"path": path, "batch": batch, "d_in": d_in,
+                         "d_out": packed.shape[0] * packed.shape[2],
+                         "n": cfg.n, "k": cfg.k_for(d_in),
+                         "pallas": bool(ex and ex.use_pallas),
+                         "interpret": bool(ex and ex.interpret)})
     # The cs_<path> scope lets the static analyzer attribute every staged
     # primitive to the execution path that produced it (repro.analysis).
     with jax.named_scope(f"cs_{path}"):
@@ -190,6 +203,15 @@ def apply_kwta(x, cfg: SparsityConfig, return_support: bool = False):
         y = kwta_local(x, k, cfg.kwta_partitions)
     else:
         y, support = kwta_support(x, k)
+    # Realized-sparsity capture (repro.obs): when the serving engine's
+    # probed decode step is tracing, report this layer's winner set (exact
+    # top-k) or a staged nnz reduction (>=-K threshold impls).  With no
+    # active capture — every other trace, including everything the static
+    # linter checks — both calls return immediately and stage nothing.
+    if support is not None:
+        obs_sparsity.observe_support(support[0], support[1], x.shape[-1])
+    elif obs_sparsity.capture_active():
+        obs_sparsity.observe_activation(y)
     return (y, support) if return_support else y
 
 

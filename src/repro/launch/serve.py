@@ -33,6 +33,20 @@ when lengths are uniform).
 (stepwise prefill through the decode kernel) as the correctness oracle the
 parity tests compare against.
 
+Telemetry (ISSUE 8): pass ``telemetry=repro.obs.Telemetry.on(...)`` and
+the engine traces spans around every stage (``schedule.admit`` /
+``prefill`` / ``insert`` / ``decode.step`` / ``sample``), samples
+queue-depth and slot-occupancy gauges each step, keeps per-request
+lifecycle records (scheduler-side), attributes the staged execution
+paths (``repro.core.api.observe_dispatch``), and — every
+``telemetry.sparsity_every`` steps — decodes through a *probed* twin of
+the step jit whose extra outputs are the per-layer k-WTA winner sets, so
+realized activation sparsity and cross-step winner overlap are measured
+from what actually ran.  ``Engine.metrics_snapshot()`` returns the whole
+picture as a JSON-ready dict, live or at end of run.  With the default
+``telemetry=None`` everything degrades to null objects and the staged
+step program is bit-identical to the un-instrumented one.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --slots 4 --requests 8 --prompt-len 16 --gen 32
@@ -41,6 +55,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 from typing import Optional, Sequence
@@ -51,8 +66,11 @@ import numpy as np
 from jax import lax
 
 from repro.configs import get_config
+from repro.core.api import observe_dispatch
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
+from repro.obs import DispatchStats, SparsityStats, Telemetry
+from repro.obs import sparsity as obs_sparsity
 from repro.runtime.scheduler import (Request, SamplingParams, Scheduler,
                                      sample_token)
 from repro.sharding import make_rules, param_sharding, use_rules
@@ -78,7 +96,8 @@ class Engine:
     sparse layer per decode step."""
 
     def __init__(self, cfg, mesh, max_seq: int, n_slots: int = 4,
-                 params=None, use_pallas: Optional[str] = None):
+                 params=None, use_pallas: Optional[str] = None,
+                 telemetry: Optional[Telemetry] = None):
         if use_pallas is not None:
             cfg = dataclasses.replace(
                 cfg,
@@ -106,6 +125,27 @@ class Engine:
             lambda p, toks: T.prefill(p, {"tokens": toks}, cfg, max_seq))
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self.prefill_calls = 0  # one per admitted prompt (tests assert)
+        # -- telemetry ------------------------------------------------------
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.off()
+        self._sparsity = SparsityStats(self.telemetry.registry)
+        self._dispatch = DispatchStats()
+        self._last_sched: Optional[Scheduler] = None
+        #: label -> {"d", "kind"} for the probed step's captured layers,
+        #: filled at the probed jit's (one) trace.
+        self._sparsity_meta: dict = {}
+
+        def _probed_step(p, c, b, pos):
+            # Twin of self._step that also returns the per-layer winner
+            # sets: the capture is active while serve_step TRACES, so the
+            # supports (already computed by apply_kwta) leave the scan as
+            # stacked extra outputs — no second top_k, no host callback.
+            with obs_sparsity.capture_supports() as cap:
+                logits, new_cache = T.serve_step(p, c, b, pos, cfg)
+            self._sparsity_meta.update(cap.meta)
+            return logits, new_cache, cap.take_arrays()
+
+        self._step_probed = jax.jit(_probed_step, donate_argnums=(1,))
 
     # -- compiled pieces ----------------------------------------------------
     @staticmethod
@@ -141,6 +181,7 @@ class Engine:
         toks[0, :p_len] = np.asarray(prompt, np.int32)
         logits, frag = self._prefill_jit(self.params, jnp.asarray(toks))
         self.prefill_calls += 1
+        self.telemetry.registry.counter("serve.prefill_calls").inc()
         return np.asarray(logits[0, p_len - 1]), frag
 
     # -- continuous-batching loop -------------------------------------------
@@ -165,8 +206,19 @@ class Engine:
                     f"request {r.uid}: prompt {len(r.prompt)} + "
                     f"max_new {r.max_new_tokens} exceeds max_seq "
                     f"{self.max_seq}")
-        sched = Scheduler(self.n_slots)
-        sched.submit_many(requests)
+        tel = self.telemetry
+        tracer = tel.tracer
+        reg = tel.registry
+        g_queue = reg.gauge("serve.queue_depth")
+        g_active = reg.gauge("serve.slots_active")
+        g_occ = reg.gauge("serve.slot_occupancy")
+        h_prefill = reg.histogram("serve.prefill_s")
+        h_step = reg.histogram("serve.decode_step_s")
+        c_steps = reg.counter("serve.decode_steps")
+        probe_every = tel.sparsity_every if tel.enabled else 0
+        sched = Scheduler(self.n_slots, telemetry=tel)
+        self._last_sched = sched
+        sched.submit_many(requests, now=0.0)
         with use_rules(self.rules):
             cache = self.new_cache(self.n_slots)
             tokens = np.zeros((self.n_slots, 1), np.int32)
@@ -174,34 +226,69 @@ class Engine:
             n_steps = 0
             t0 = time.perf_counter()
             while sched.has_work:
-                for slot in sched.admit(now=time.perf_counter() - t0):
+                with tracer.span("schedule.admit"):
+                    admitted = sched.admit(now=time.perf_counter() - t0)
+                for slot in admitted:
                     req = slot.request
-                    row, frag = self._prefill(req.prompt)
-                    cache = self._insert(cache, frag,
-                                         jnp.int32(slot.index))
-                    first = sample_token(row, req.sampling, slot.rng)
+                    self._sparsity.reset_row(slot.index)
+                    t_pre = time.perf_counter()
+                    with tracer.span("prefill", uid=req.uid,
+                                     prompt_len=len(req.prompt)):
+                        row, frag = self._prefill(req.prompt)
+                        with tracer.span("insert"):
+                            cache = self._insert(cache, frag,
+                                                 jnp.int32(slot.index))
+                    h_prefill.observe(time.perf_counter() - t_pre)
+                    with tracer.span("sample"):
+                        first = sample_token(row, req.sampling, slot.rng)
                     sched.record_token(slot, first,
                                        now=time.perf_counter() - t0)
                     tokens[slot.index, 0] = first
                     pos[slot.index] = slot.pos  # == len(prompt)
-                sched.retire_done()  # budget-1 requests finish at prefill
+                # budget-1 requests finish at prefill
+                sched.retire_done(now=time.perf_counter() - t0)
                 active = sched.active_slots()
+                g_queue.set(len(sched.queue))
+                g_active.set(len(active))
+                g_occ.set(len(active) / self.n_slots)
                 if not active:
                     continue
-                logits, cache = self._step(self.params, cache,
-                                           {"tokens": jnp.asarray(tokens)},
-                                           jnp.asarray(pos))
-                logits = np.asarray(logits)
+                # The dispatch observer rides the FIRST decode-step trace
+                # only (sealed after), so path attribution describes one
+                # staged step, not one per retrace.
+                obs_ctx = (observe_dispatch(self._dispatch.on_event)
+                           if tel.enabled and not self._dispatch.sealed
+                           else contextlib.nullcontext())
+                probed = probe_every > 0 and n_steps % probe_every == 0
+                t_step = time.perf_counter()
+                with tracer.span("decode.step", probed=probed), obs_ctx:
+                    step_in = ({"tokens": jnp.asarray(tokens)},
+                               jnp.asarray(pos))
+                    if probed:
+                        logits, cache, sp_aux = self._step_probed(
+                            self.params, cache, *step_in)
+                    else:
+                        logits, cache = self._step(self.params, cache,
+                                                   *step_in)
+                    logits = np.asarray(logits)
+                self._dispatch.seal()
+                h_step.observe(time.perf_counter() - t_step)
+                c_steps.inc()
                 n_steps += 1
+                if probed:
+                    self._sparsity.update(
+                        sp_aux, self._sparsity_meta,
+                        active_rows=[s.index for s in active])
                 now = time.perf_counter() - t0
-                for slot in active:
-                    nxt = sample_token(logits[slot.index],
-                                       slot.request.sampling, slot.rng)
-                    sched.record_token(slot, nxt, now=now)
-                    tokens[slot.index, 0] = nxt
-                    slot.pos += 1
-                    pos[slot.index] = slot.pos
-                sched.retire_done()
+                with tracer.span("sample"):
+                    for slot in active:
+                        nxt = sample_token(logits[slot.index],
+                                           slot.request.sampling, slot.rng)
+                        sched.record_token(slot, nxt, now=now)
+                        tokens[slot.index, 0] = nxt
+                        slot.pos += 1
+                        pos[slot.index] = slot.pos
+                sched.retire_done(now=time.perf_counter() - t0)
             dt = time.perf_counter() - t0
         total = sum(len(v) for v in sched.finished.values())
         stats = {
@@ -211,7 +298,47 @@ class Engine:
             "prefill_calls": self.prefill_calls,
             "ttft_s": dict(sched.ttft),
         }
+        if tel.enabled:
+            tel.emit({"kind": "snapshot",
+                      "metrics": self.metrics_snapshot()})
         return sched.finished, stats
+
+    # -- telemetry read side -------------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        """JSON-ready snapshot of everything the telemetry layer measured.
+
+        Callable live (mid-``serve``) or at end of run:
+
+        * ``metrics`` — registry counters/gauges/histograms (per-request
+          TTFT and inter-token latency histograms, queue-depth and
+          slot-occupancy gauges, stage latency histograms);
+        * ``stages`` — prefill / decode.step / schedule.admit / sample
+          wall-clock totals and span counts from the tracer;
+        * ``requests`` — per-request lifecycle records
+          (enqueue/admit/first-token/finish times, token counts, ITL
+          aggregates) keyed by uid;
+        * ``sparsity`` — per-layer realized k/N and cross-step winner
+          overlap from the probed decode steps, plus the staged
+          execution-path attribution (topk/hadamard/dense × backend,
+          est. FLOP shares, est. sparse-vs-dense decode time split).
+        """
+        stages = self.telemetry.tracer.totals()
+        decode_total = stages.get("decode.step", {}).get("total_s")
+        requests = {}
+        if self._last_sched is not None:
+            requests = {uid: rec.to_event()
+                        for uid, rec in self._last_sched.records.items()}
+        return {
+            "enabled": self.telemetry.enabled,
+            "metrics": self.telemetry.registry.snapshot(),
+            "stages": stages,
+            "requests": requests,
+            "sparsity": {
+                "layers": self._sparsity.summary(),
+                "paths": self._dispatch.summary(decode_total),
+                "probe_steps": self._sparsity.probes,
+            },
+        }
 
     # -- static-batch oracle -------------------------------------------------
     def generate_static(self, prompts: np.ndarray, gen_len: int):
@@ -260,6 +387,12 @@ def main():
                     default=None,
                     help="kernel executor override for the sparse paths "
                     "(default: the config's own setting)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable runtime telemetry (repro.obs) and print "
+                    "a metrics snapshot at end of run")
+    ap.add_argument("--telemetry-jsonl", default=None, metavar="PATH",
+                    help="stream telemetry events to PATH as JSON lines "
+                    "(implies --telemetry)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -267,8 +400,12 @@ def main():
         cfg = cfg.reduced()
     dims = tuple(int(x) for x in args.mesh.split("x"))
     mesh = make_mesh(dims, ("data", "model"))
+    telemetry = None
+    if args.telemetry or args.telemetry_jsonl:
+        telemetry = Telemetry.on(jsonl_path=args.telemetry_jsonl)
     engine = Engine(cfg, mesh, max_seq=args.prompt_len + args.gen + 1,
-                    n_slots=args.slots, use_pallas=args.use_pallas)
+                    n_slots=args.slots, use_pallas=args.use_pallas,
+                    telemetry=telemetry)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -281,6 +418,11 @@ def main():
     print(f"served {len(out)} requests, {stats['decode_steps']} decode "
           f"steps, {stats['prefill_calls']} prefill calls, "
           f"{stats['tok_s']:.1f} tok/s; sample: {out[0][:16]}")
+    if telemetry is not None:
+        import json as _json
+        print(_json.dumps(engine.metrics_snapshot(), indent=2,
+                          sort_keys=True))
+        telemetry.close()
 
 
 if __name__ == "__main__":

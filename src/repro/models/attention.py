@@ -22,6 +22,7 @@ from jax import lax
 from repro.core.api import SparsityConfig
 from repro.core.layers import (apply_kwta, linear_apply, linear_init,
                                packed_linear_apply, packed_linear_init)
+from repro.obs.sparsity import observe_site
 from repro.sharding.context import constrain
 from .common import apply_rope, normal_init
 
@@ -50,7 +51,7 @@ def _o_proj(params, out_flat, sp: SparsityConfig):
     the CS-packed o-projection — the same one-Select-per-layer pipeline as
     the FFN down projection (paper Fig. 8a applied to §6.4's Transformer
     projections)."""
-    with jax.named_scope("o_proj"):
+    with jax.named_scope("o_proj"), observe_site("o_proj"):
         if sp.activation_sparse:
             out_flat, support = apply_kwta(out_flat, sp, return_support=True)
             return _proj_apply(params, out_flat, sp, x_is_sparse=True,

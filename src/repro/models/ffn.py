@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core.api import SparsityConfig
 from repro.core.layers import (apply_kwta, linear_apply, linear_init,
                                packed_linear_apply, packed_linear_init)
+from repro.obs.sparsity import observe_site
 from repro.sharding.context import constrain
 
 
@@ -70,7 +71,7 @@ def ffn_apply(params, x, cfg_sp: SparsityConfig, act: str = "silu"):
     h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
     # Select (k-WTA) — identity when disabled. The winner support is handed
     # to the down projection so the sparse-sparse path never re-derives it.
-    with jax.named_scope("ffn_kwta"):
+    with jax.named_scope("ffn_kwta"), observe_site("ffn"):
         h, support = apply_kwta(h, cfg_sp, return_support=True)
     with jax.named_scope("ffn_down"):
         return _apply_one(params["down"], h, cfg_sp,

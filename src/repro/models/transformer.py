@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.obs import sparsity as obs_sparsity
 from repro.sharding.context import constrain, is_spec as _is_spec
 from . import attention as A
 from . import ssm as S
@@ -325,12 +326,15 @@ def prefill(params, batch, cfg, max_seq: int):
         caches = {}
         for i, kind in enumerate(cfg.block_pattern):
             p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
-            with jax.named_scope(f"b{i}_{kind}"):
+            with jax.named_scope(f"b{i}_{kind}"), \
+                    obs_sparsity.observe_site(f"b{i}"):
                 x, caches[f"b{i}"] = _block_prefill(kind, p, x, cfg,
                                                     positions, max_seq)
-        return x, caches
+        # Same capture handoff as serve_step (empty tuple when inactive).
+        return x, (caches, obs_sparsity.drain_pending())
 
-    x, cache = lax.scan(unit_fn, x, params["units"])
+    x, (cache, sparsity_aux) = lax.scan(unit_fn, x, params["units"])
+    obs_sparsity.emit_stacked(sparsity_aux)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
     logits = x @ table.astype(ct).T
@@ -364,12 +368,20 @@ def serve_step(params, cache, batch, pos, cfg):
         new_cache = {}
         for i, kind in enumerate(cfg.block_pattern):
             p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
-            with jax.named_scope(f"b{i}_{kind}"):
+            with jax.named_scope(f"b{i}_{kind}"), \
+                    obs_sparsity.observe_site(f"b{i}"):
                 x, new_cache[f"b{i}"] = _block_decode(
                     kind, p, x, cfg, unit_cache[f"b{i}"], pos)
-        return x, new_cache
+        # Realized-sparsity capture handoff: when the serving engine's
+        # probed step is tracing, the winner sets observed inside this
+        # body leave the scan as stacked (n_units, ...) outputs.  With no
+        # active capture this is the empty tuple — zero extra leaves, the
+        # staged jaxpr is unchanged (asserted by tests/test_obs.py).
+        return x, (new_cache, obs_sparsity.drain_pending())
 
-    x, new_cache = lax.scan(unit_fn, x, (params["units"], cache))
+    x, (new_cache, sparsity_aux) = lax.scan(unit_fn, x,
+                                            (params["units"], cache))
+    obs_sparsity.emit_stacked(sparsity_aux)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
     logits = (x @ table.astype(ct).T)[:, 0]

@@ -1,0 +1,77 @@
+"""Runtime observability: metrics registry, span tracer, realized-sparsity
+telemetry, exporters.
+
+:class:`Telemetry` bundles the three runtime surfaces the serving and
+training stacks share:
+
+* ``registry`` — counters / gauges / latency histograms
+  (:mod:`repro.obs.metrics`),
+* ``tracer`` — nested wall-clock spans with optional JSONL streaming
+  (:mod:`repro.obs.trace`),
+* ``sparsity`` / ``dispatch`` — realized activation sparsity per layer
+  and execution-path attribution (:mod:`repro.obs.sparsity`).
+
+``Telemetry.off()`` (the default everywhere) hands out the null registry
+and tracer: every instrumented call site degrades to a no-op attribute
+call, and nothing extra is staged into any jit — the invariant the
+disabled-mode tests and the ``repro.analysis`` CI lint pin down.
+
+See ``src/repro/obs/README.md`` for the metrics catalogue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from .export import JsonlWriter, latency_columns, sparsity_columns
+from .metrics import (DEFAULT_LATENCY_EDGES_S, NULL_REGISTRY, Counter,
+                      Gauge, Histogram, Registry)
+from .sparsity import DispatchStats, SparsityStats
+from .trace import NULL_TRACER, Tracer
+
+__all__ = ["Telemetry", "Registry", "Counter", "Gauge", "Histogram",
+           "Tracer", "JsonlWriter", "SparsityStats", "DispatchStats",
+           "NULL_REGISTRY", "NULL_TRACER", "DEFAULT_LATENCY_EDGES_S",
+           "latency_columns", "sparsity_columns"]
+
+
+@dataclasses.dataclass
+class Telemetry:
+    """One run's observability bundle (engine-, trainer- or test-owned).
+
+    ``sparsity_every`` — probe the decode batch's realized sparsity every
+    N decode steps (0 disables the probed step entirely; 1 probes every
+    step).  The probe is a *separate* jit returning the winner supports
+    as extra outputs, so the un-probed step's staged program is
+    untouched.
+    """
+
+    registry: Registry
+    tracer: Tracer
+    enabled: bool = True
+    sparsity_every: int = 1
+    sink: Optional[JsonlWriter] = None
+
+    @classmethod
+    def on(cls, jsonl_path: Optional[str] = None,
+           sparsity_every: int = 1) -> "Telemetry":
+        sink = JsonlWriter(jsonl_path) if jsonl_path else None
+        return cls(registry=Registry(enabled=True),
+                   tracer=Tracer(enabled=True, sink=sink),
+                   enabled=True, sparsity_every=sparsity_every, sink=sink)
+
+    @classmethod
+    def off(cls) -> "Telemetry":
+        return cls(registry=NULL_REGISTRY, tracer=NULL_TRACER,
+                   enabled=False, sparsity_every=0, sink=None)
+
+    def emit(self, event: Dict) -> None:
+        """Write one non-span event (request lifecycle, final snapshot)
+        to the JSONL sink, if any."""
+        if self.sink is not None:
+            self.sink.write(event)
+
+    def close(self) -> None:
+        if self.sink is not None:
+            self.sink.close()

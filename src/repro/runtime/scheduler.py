@@ -11,6 +11,14 @@ Sampling lives here too: greedy and temperature/top-k, applied on host to
 the per-slot logits row the engine hands over each step.  Per-request
 numpy Generators keep sampling deterministic per request regardless of
 which slot the request lands in or what else shares the batch.
+
+Telemetry (ISSUE 8): construct with ``telemetry=repro.obs.Telemetry`` and
+the scheduler keeps a full per-request lifecycle record
+(:class:`RequestRecord`: enqueue -> admit -> first token -> inter-token
+latencies -> finish), feeds the ``serve.*`` histograms/counters, and
+emits one ``kind="request"`` JSONL event per retirement.  With the
+default (disabled) telemetry every hook degrades to a null-metric call
+and the records still accumulate (they are plain Python, ~100 B each).
 """
 
 from __future__ import annotations
@@ -40,6 +48,45 @@ class Request:
 
 
 @dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle of one request through the engine, in seconds relative
+    to the serve loop's epoch.  ``itl_*`` aggregate the inter-token
+    latencies (gaps between consecutive sampled tokens after the first)."""
+    uid: int
+    t_enqueue: float = 0.0
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+    n_tokens: int = 0
+    itl_sum: float = 0.0
+    itl_count: int = 0
+    itl_max: float = 0.0
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(0.0, self.t_admit - self.t_enqueue)
+
+    @property
+    def ttft_s(self) -> float:
+        return max(0.0, self.t_first_token - self.t_enqueue)
+
+    def to_event(self) -> Dict:
+        """The ``kind="request"`` JSONL event (schema: repro.obs.export)."""
+        ev = {"kind": "request", "uid": self.uid,
+              "t_enqueue": round(self.t_enqueue, 6),
+              "t_admit": round(self.t_admit, 6),
+              "t_first_token": round(self.t_first_token, 6),
+              "t_finish": round(self.t_finish, 6),
+              "n_tokens": self.n_tokens,
+              "queue_wait_s": round(self.queue_wait_s, 6),
+              "ttft_s": round(self.ttft_s, 6)}
+        if self.itl_count:
+            ev["itl_mean_s"] = round(self.itl_sum / self.itl_count, 6)
+            ev["itl_max_s"] = round(self.itl_max, 6)
+        return ev
+
+
+@dataclasses.dataclass
 class Slot:
     """One row of the decode batch."""
     index: int
@@ -49,6 +96,7 @@ class Slot:
     rng: Optional[np.random.Generator] = None
     admit_time: float = 0.0
     first_token_time: float = 0.0
+    last_token_time: float = 0.0
 
     @property
     def busy(self) -> bool:
@@ -83,21 +131,37 @@ def sample_token(logits: np.ndarray, params: SamplingParams,
 class Scheduler:
     """FIFO admission into a fixed pool of decode slots."""
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, telemetry=None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
+        if telemetry is None:
+            from repro.obs import Telemetry
+            telemetry = Telemetry.off()
+        self.telemetry = telemetry
         self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
         self.queue: Deque[Request] = deque()
         self.finished: Dict[int, List[int]] = {}
         self.ttft: Dict[int, float] = {}  # uid -> time of first token
+        self.records: Dict[int, RequestRecord] = {}
+        reg = telemetry.registry
+        self._c_submitted = reg.counter("serve.requests_submitted")
+        self._c_finished = reg.counter("serve.requests_finished")
+        self._c_tokens = reg.counter("serve.tokens_generated")
+        self._h_wait = reg.histogram("serve.queue_wait_s")
+        self._h_ttft = reg.histogram("serve.ttft_s")
+        self._h_itl = reg.histogram("serve.itl_s")
 
     # -- queue side ---------------------------------------------------------
-    def submit(self, request: Request) -> None:
+    def submit(self, request: Request, now: float = 0.0) -> None:
         self.queue.append(request)
+        self.records[request.uid] = RequestRecord(uid=request.uid,
+                                                  t_enqueue=now)
+        self._c_submitted.inc()
 
-    def submit_many(self, requests: Sequence[Request]) -> None:
+    def submit_many(self, requests: Sequence[Request],
+                    now: float = 0.0) -> None:
         for r in requests:
-            self.submit(r)
+            self.submit(r, now=now)
 
     @property
     def has_work(self) -> bool:
@@ -124,16 +188,36 @@ class Scheduler:
             slot.rng = np.random.default_rng(req.sampling.seed)
             slot.admit_time = now
             slot.first_token_time = 0.0
+            slot.last_token_time = 0.0
+            rec = self.records.get(req.uid)
+            if rec is not None:
+                rec.t_admit = now
+                self._h_wait.observe(rec.queue_wait_s)
             admitted.append(slot)
         return admitted
 
     def record_token(self, slot: Slot, token: int, now: float = 0.0) -> None:
+        rec = self.records.get(slot.request.uid)
         if not slot.generated:
             slot.first_token_time = now
             self.ttft[slot.request.uid] = now
+            if rec is not None:
+                rec.t_first_token = now
+                self._h_ttft.observe(rec.ttft_s)
+        else:
+            itl = max(0.0, now - slot.last_token_time)
+            self._h_itl.observe(itl)
+            if rec is not None:
+                rec.itl_sum += itl
+                rec.itl_count += 1
+                rec.itl_max = max(rec.itl_max, itl)
+        slot.last_token_time = now
         slot.generated.append(token)
+        if rec is not None:
+            rec.n_tokens += 1
+        self._c_tokens.inc()
 
-    def retire_done(self) -> List[Slot]:
+    def retire_done(self, now: float = 0.0) -> List[Slot]:
         """Free every slot whose request finished; their outputs land in
         ``finished`` keyed by request uid. Returns the retired slots (with
         .request still attached for the caller's bookkeeping)."""
@@ -141,6 +225,11 @@ class Scheduler:
         for slot in self.slots:
             if slot.busy and slot.done:
                 self.finished[slot.request.uid] = list(slot.generated)
+                rec = self.records.get(slot.request.uid)
+                if rec is not None:
+                    rec.t_finish = now
+                    self.telemetry.emit(rec.to_event())
+                self._c_finished.inc()
                 retired.append(dataclasses.replace(slot))
                 slot.request = None
                 slot.rng = None
