@@ -35,13 +35,15 @@ VARIANTS = [
 ]
 
 
-def _mk_engine(sparsity, n_slots, use_pallas=None, telemetry=None):
+def _mk_engine(sparsity, n_slots, use_pallas=None, telemetry=None,
+               max_seq=None, **engine_kw):
     cfg = get_config("smollm-360m").reduced(
         d_model=128, d_ff=512, vocab_size=512, n_heads=4, n_kv_heads=2,
         head_pad=0, ffn_sparsity=sparsity)
     mesh = make_mesh((1, 1), ("data", "model"))
-    return Engine(cfg, mesh, max_seq=PROMPT_LEN + GEN + 1, n_slots=n_slots,
-                  use_pallas=use_pallas, telemetry=telemetry)
+    return Engine(cfg, mesh, max_seq=max_seq or PROMPT_LEN + GEN + 1,
+                  n_slots=n_slots, use_pallas=use_pallas,
+                  telemetry=telemetry, **engine_kw)
 
 
 def _requests(engine, n, gen=GEN):
@@ -51,6 +53,15 @@ def _requests(engine, n, gen=GEN):
                                         PROMPT_LEN).tolist(),
                     max_new_tokens=gen)
             for i in range(n)]
+
+
+def _mixed_requests(vocab, lens, gens, seed=0):
+    """Fresh request objects (the engine mutates none, but fresh lists
+    keep runs independent) with per-request prompt lengths."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, vocab, n).tolist(),
+                    max_new_tokens=g)
+            for i, (n, g) in enumerate(zip(lens, gens))]
 
 
 def _bench_static(engine, batch):
@@ -110,6 +121,82 @@ def run(report):
             "continuous_tok_s": round(tps, 1),
             "continuous_ttft_ms": round(ttft * 1e3, 1),
         })
+    # -- paged KV cache: token parity + throughput (ISSUE 9) ----------------
+    # Mixed prompt lengths across 8 requests / 4 slots; the contiguous
+    # engine is the oracle — the paged engine (page-table decode, chunked
+    # prefill) must generate the exact same greedy tokens.
+    sp = VARIANTS[2][1]
+    plens = [5, 19, 3, 26, 9, 14, 7, 22]
+    pgens = [6 + (i % 5) for i in range(8)]
+
+    def _parity_reqs(vocab):
+        return _mixed_requests(vocab, plens, pgens)
+
+    eng_c = _mk_engine(sp, n_slots=4)
+    # warm with the FULL workload: fused prefill compiles per prompt
+    # bucket, and the mixed lengths span several buckets
+    eng_c.serve(_parity_reqs(eng_c.cfg.vocab_size))
+    t0 = time.perf_counter()
+    out_c, _ = eng_c.serve(_parity_reqs(eng_c.cfg.vocab_size))
+    dt_c = time.perf_counter() - t0
+    eng_p = _mk_engine(sp, n_slots=4, kv_layout="paged", page_size=8,
+                       prefill_chunk=8, params=eng_c.params)
+    eng_p.serve(_parity_reqs(eng_p.cfg.vocab_size)[:1])  # warm jits
+    t0 = time.perf_counter()
+    out_p, stats_p = eng_p.serve(_parity_reqs(eng_p.cfg.vocab_size))
+    dt_p = time.perf_counter() - t0
+    assert out_p == out_c, "paged decode must be token-identical to the " \
+        "contiguous oracle on the mixed-length parity workload"
+    n_tok = sum(len(v) for v in out_p.values())
+    report("serve_paged_parity_batch4", 0.0, {
+        "parity": True,
+        "contiguous_tok_s": round(n_tok / dt_c, 1),
+        "paged_tok_s": round(n_tok / dt_p, 1),
+        "prefill_chunks": stats_p["prefill_chunks"],
+        "pages_capacity": stats_p["pages_capacity"],
+        "page_size": stats_p["page_size"],
+    })
+    # -- chunked prefill bounds in-flight ITL under a long prompt -----------
+    # A 96-token prompt arrives while short requests decode.  Monolithic
+    # (contiguous) prefill stalls every in-flight slot for the whole
+    # forward; page-aligned chunks bound the stall to one chunk per
+    # iteration.  Acceptance (ISSUE 9): mixed-workload p95 inter-token
+    # latency <= 1.5x the no-long-prompt paged baseline.
+    LONG, SHORT = 96, 12
+    short_lens = [SHORT] * 8
+    mixed_lens = [SHORT] * 4 + [LONG] + [SHORT] * 3
+    short_gens = [16] * 8
+    mixed_gens = [16] * 4 + [8] + [16] * 3
+
+    def _itl_run(engine, tel, lens, gens):
+        engine.serve(_mixed_requests(engine.cfg.vocab_size, [SHORT, LONG],
+                                     [2, 2], seed=1))  # warm all jits
+        tel.registry.reset()
+        _, stats = engine.serve(
+            _mixed_requests(engine.cfg.vocab_size, lens, gens))
+        h = tel.registry.histogram("serve.itl_s")
+        return {"p95_ms": h.percentile(95.0) * 1e3,
+                "max_ms": h.snapshot()["max"] * 1e3}, stats
+
+    tel_p = Telemetry.on()
+    eng_pg = _mk_engine(sp, n_slots=4, telemetry=tel_p, max_seq=128,
+                        kv_layout="paged", page_size=8, prefill_chunk=8)
+    base, _ = _itl_run(eng_pg, tel_p, short_lens, short_gens)
+    mixed, stats_m = _itl_run(eng_pg, tel_p, mixed_lens, mixed_gens)
+    tel_c = Telemetry.on()
+    eng_ct = _mk_engine(sp, n_slots=4, telemetry=tel_c, max_seq=128)
+    cont, _ = _itl_run(eng_ct, tel_c, mixed_lens, mixed_gens)
+    ratio = mixed["p95_ms"] / base["p95_ms"]
+    report("serve_paged_mixed_longprompt", 0.0, {
+        "short_only_itl_p95_ms": round(base["p95_ms"], 2),
+        "mixed_itl_p95_ms": round(mixed["p95_ms"], 2),
+        "itl_p95_ratio": round(ratio, 2),
+        "bound_1p5x_ok": bool(ratio <= 1.5),
+        "mixed_itl_max_ms": round(mixed["max_ms"], 2),
+        "contiguous_mixed_itl_p95_ms": round(cont["p95_ms"], 2),
+        "contiguous_mixed_itl_max_ms": round(cont["max_ms"], 2),
+        "prefill_chunks": stats_m["prefill_chunks"],
+    })
     # -- telemetry overhead + schema-v2 latency/sparsity columns ------------
     # Telemetry-off rows above stay the trajectory baseline; this pass
     # re-runs the sparse-sparse continuous bench with full telemetry

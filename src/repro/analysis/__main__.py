@@ -34,7 +34,8 @@ def build_parser() -> argparse.ArgumentParser:
                    "kernel-body verifier (oob-access, grid-race, "
                    "unmasked-pad, scratch-overflow) across all declared "
                    "shape configs")
-    p.add_argument("--entries", default="decode,prefill,kernel,train",
+    p.add_argument("--entries",
+                   default="decode,decode_paged,prefill,kernel,train",
                    help="comma-separated entrypoints to lint "
                    "(default: all)")
     p.add_argument("--use-pallas", default="force",

@@ -5,8 +5,9 @@ Library API
 * :func:`lint_fn` — trace any callable with :func:`jax.make_jaxpr` and
   run the jaxpr rule pack over it.
 * :func:`lint_config` — lint the named architecture's real entrypoints
-  (decode step, fused prefill, the kwta→packed-projection kernel
-  pipeline, forward training loss) abstractly: params and caches are
+  (decode step, paged decode step, fused prefill, the kwta→packed-
+  projection kernel pipeline, forward training loss) abstractly: params
+  and caches are
   :func:`jax.eval_shape` pytrees, so even the full-scale configs lint on
   a CPU without allocating a single weight.  The decode step is
   additionally AOT-compiled and its HLO text checked (host transfers,
@@ -44,7 +45,7 @@ from .hlo_rules import rule_hlo_collectives, rule_hlo_host_transfer
 from .rules import (rule_dense_fallback, rule_dtype_promotion,
                     rule_pallas_resource, rule_select_count)
 
-ENTRIES = ("decode", "prefill", "kernel", "train")
+ENTRIES = ("decode", "decode_paged", "prefill", "kernel", "train")
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +255,31 @@ def lint_config(arch, entries: Sequence[str] = ENTRIES,
             hlo = jax.jit(fn).lower(params, cache, batch, pos)\
                 .compile().as_text()
             report.extend(lint_hlo(hlo, entry="decode", waivers=waivers))
+
+    if "decode_paged" in entries and all(
+            k in ("attn", "shared_attn") for k in cfg.block_pattern):
+        # Same decode step through the paged KV pools: the gather/scatter
+        # indirection must not stage extra Selects, promote dtypes, or
+        # (HLO) introduce host transfers — the page tables stay on device.
+        from repro.runtime.kvcache import PagedKV
+        geo = PagedKV.build(max_seq, slots, page_size=16)
+        cache = jax.eval_shape(lambda: T.init_paged_cache(
+            cfg, geo.n_pages, geo.page_size)[0])
+        batch = _decode_batch(cfg, slots)
+        pos = _sds((slots,), jnp.int32)
+        pages = _sds((slots, geo.blocks_per_slot), jnp.int32)
+        fn = lambda p, c, b, q, pg: T.serve_step(p, c, b, q, cfg, pages=pg)
+        exp = expected_selects(cfg, n_tokens=slots)
+        report.extend(lint_fn(
+            fn, params, cache, batch, pos, pages, entry="decode_paged",
+            expected=exp,
+            check_dense_fallback=_wants_dense_fallback_rule(cfg, slots),
+            backend=backend, waivers=waivers))
+        if check_hlo:
+            hlo = jax.jit(fn).lower(params, cache, batch, pos, pages)\
+                .compile().as_text()
+            report.extend(lint_hlo(hlo, entry="decode_paged",
+                                   waivers=waivers))
 
     if "prefill" in entries and T.supports_fused_prefill(cfg):
         batch = _seq_batch(cfg, 1, seq, labels=False)

@@ -33,6 +33,16 @@ when lengths are uniform).
 (stepwise prefill through the decode kernel) as the correctness oracle the
 parity tests compare against.
 
+Paged KV cache (ISSUE 9): ``Engine(kv_layout="paged")`` swaps the
+``(n_slots, max_seq)`` contiguous cache for a pool of fixed-size pages
+(:mod:`repro.runtime.kvcache`) — admission reserves each request's
+worst-case page chain, prompts prefill in page-aligned chunks interleaved
+with decode steps (one chunk per loop iteration, bounding the ITL spike
+in-flight requests see when a long prompt lands), decode reads/writes
+through per-slot page tables threaded into the jit, and retirement
+returns pages copy-free.  Token-exact vs the contiguous layout (greedy),
+which stays the default and the parity oracle.
+
 Telemetry (ISSUE 8): pass ``telemetry=repro.obs.Telemetry.on(...)`` and
 the engine traces spans around every stage (``schedule.admit`` /
 ``prefill`` / ``insert`` / ``decode.step`` / ``sample``), samples
@@ -58,6 +68,7 @@ import argparse
 import contextlib
 import dataclasses
 import time
+from collections import deque
 from typing import Optional, Sequence
 
 import jax
@@ -71,6 +82,7 @@ from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.obs import DispatchStats, SparsityStats, Telemetry
 from repro.obs import sparsity as obs_sparsity
+from repro.runtime.kvcache import NULL_PAGE, BlockAllocator, PagedKV
 from repro.runtime.scheduler import (Request, SamplingParams, Scheduler,
                                      sample_token)
 from repro.sharding import make_rules, param_sharding, use_rules
@@ -97,7 +109,13 @@ class Engine:
 
     def __init__(self, cfg, mesh, max_seq: int, n_slots: int = 4,
                  params=None, use_pallas: Optional[str] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 kv_layout: str = "contiguous", page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
+                             f"got {kv_layout!r}")
         if use_pallas is not None:
             cfg = dataclasses.replace(
                 cfg,
@@ -125,6 +143,39 @@ class Engine:
             lambda p, toks: T.prefill(p, {"tokens": toks}, cfg, max_seq))
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self.prefill_calls = 0  # one per admitted prompt (tests assert)
+        # -- paged KV layout --------------------------------------------------
+        self.kv_layout = kv_layout
+        self.kv_geo: Optional[PagedKV] = None
+        if kv_layout == "paged":
+            self.kv_geo = PagedKV.build(max_seq, n_slots,
+                                        page_size=page_size,
+                                        n_pages=n_pages)
+            # page-aligned chunk bucket: long prompts prefill in slabs of
+            # this many rows, one slab per serve-loop iteration; the true
+            # chunk length rides in as a traced scalar, so every chunk
+            # shares ONE compile.
+            self.prefill_chunk = (prefill_chunk if prefill_chunk is not None
+                                  else min(4 * self.kv_geo.page_size,
+                                           self.kv_geo.view_len))
+            self.kv_geo.chunk_spans(1, self.prefill_chunk)  # validates
+            self._step_paged = jax.jit(
+                lambda p, c, b, pos, pg: T.serve_step(p, c, b, pos, cfg,
+                                                      pages=pg),
+                donate_argnums=(1,))
+            self._chunk_jit = jax.jit(
+                lambda p, c, toks, pg, start, ln: T.prefill_chunk(
+                    p, c, {"tokens": toks}, start, ln, cfg, pg),
+                donate_argnums=(1,))
+
+            def _probed_step_paged(p, c, b, pos, pg):
+                with obs_sparsity.capture_supports() as cap:
+                    logits, new_cache = T.serve_step(p, c, b, pos, cfg,
+                                                     pages=pg)
+                self._sparsity_meta.update(cap.meta)
+                return logits, new_cache, cap.take_arrays()
+
+            self._step_paged_probed = jax.jit(_probed_step_paged,
+                                              donate_argnums=(1,))
         # -- telemetry ------------------------------------------------------
         self.telemetry = telemetry if telemetry is not None \
             else Telemetry.off()
@@ -163,6 +214,17 @@ class Engine:
             shard = param_sharding(specs, cache, self.rules)
             return jax.device_put(cache, shard)
 
+    def new_paged_cache(self):
+        """The page pools (``kv_layout='paged'``): leaves shaped
+        (n_units, n_pages, page_size, ...), addressed through per-slot
+        page tables instead of batch rows."""
+        geo = self.kv_geo
+        with use_rules(self.rules):
+            cache, specs = T.init_paged_cache(self.cfg, geo.n_pages,
+                                              geo.page_size)
+            shard = param_sharding(specs, cache, self.rules)
+            return jax.device_put(cache, shard)
+
     def _prefill(self, prompt: Sequence[int]):
         """One fused-prefill call. Returns (last-position logits (vocab,),
         cache fragment sized (n_units, 1, max_seq, ...)).
@@ -191,6 +253,11 @@ class Engine:
         Returns (outputs, stats): outputs maps request uid -> generated
         token list; stats has tok/s, time-to-first-token per request, and
         decode-step/prefill-call counts.
+
+        With ``kv_layout='paged'`` the same loop runs over the page-pool
+        cache: admission reserves KV pages, prompts prefill in
+        page-aligned chunks interleaved with decode steps, and retirement
+        releases pages copy-free (see :meth:`_serve_paged`).
         """
         if not T.supports_fused_prefill(self.cfg):
             raise NotImplementedError(
@@ -206,6 +273,8 @@ class Engine:
                     f"request {r.uid}: prompt {len(r.prompt)} + "
                     f"max_new {r.max_new_tokens} exceeds max_seq "
                     f"{self.max_seq}")
+        if self.kv_layout == "paged":
+            return self._serve_paged(requests)
         tel = self.telemetry
         tracer = tel.tracer
         reg = tel.registry
@@ -214,6 +283,7 @@ class Engine:
         g_occ = reg.gauge("serve.slot_occupancy")
         h_prefill = reg.histogram("serve.prefill_s")
         h_step = reg.histogram("serve.decode_step_s")
+        h_step_recent = reg.rolling_histogram("serve.decode_step_recent_s")
         c_steps = reg.counter("serve.decode_steps")
         probe_every = tel.sparsity_every if tel.enabled else 0
         sched = Scheduler(self.n_slots, telemetry=tel)
@@ -272,7 +342,9 @@ class Engine:
                                                    *step_in)
                     logits = np.asarray(logits)
                 self._dispatch.seal()
-                h_step.observe(time.perf_counter() - t_step)
+                dt_step = time.perf_counter() - t_step
+                h_step.observe(dt_step)
+                h_step_recent.observe(dt_step)
                 c_steps.inc()
                 n_steps += 1
                 if probed:
@@ -303,6 +375,177 @@ class Engine:
                       "metrics": self.metrics_snapshot()})
         return sched.finished, stats
 
+    # -- paged serve loop -----------------------------------------------------
+    def _serve_paged(self, requests: Sequence[Request]):
+        """Paged serve loop: admit-by-pages -> chunked prefill (one chunk
+        per iteration, interleaved with decode) -> decode through the
+        page tables -> retire (copy-free page reclamation).
+
+        Differences from the contiguous loop:
+
+        * Admission is gated on FREE PAGES, not just free slots: the
+          queue head reserves ``ceil((prompt + max_new) / page_size)``
+          pages at admit, so decode can never run out mid-request.
+        * A long prompt no longer stalls in-flight decode for its whole
+          prefill: each iteration forwards at most ONE page-aligned
+          chunk of the oldest prefilling slot, then decodes the slots
+          whose prompts are fully cached — bounding the inter-token
+          latency spike other requests see at admission
+          (benchmarks/bench_serve.py measures the p95).
+        * The decode step receives the per-slot page tables; rows of
+          slots that are free or still prefilling are nulled for the
+          step, so their (ignored) writes sink into the null page
+          instead of a live chain.
+        """
+        geo = self.kv_geo
+        alloc = BlockAllocator(geo.n_pages, geo.page_size)
+        for r in requests:
+            need = alloc.pages_needed(len(r.prompt) + r.max_new_tokens)
+            if need > alloc.capacity:
+                raise ValueError(
+                    f"request {r.uid}: needs {need} KV pages, pool holds "
+                    f"{alloc.capacity} — raise n_pages")
+        tel = self.telemetry
+        tracer = tel.tracer
+        reg = tel.registry
+        g_queue = reg.gauge("serve.queue_depth")
+        g_active = reg.gauge("serve.slots_active")
+        g_occ = reg.gauge("serve.slot_occupancy")
+        h_chunk = reg.histogram("serve.prefill_chunk_s")
+        h_step = reg.histogram("serve.decode_step_s")
+        h_step_recent = reg.rolling_histogram("serve.decode_step_recent_s")
+        c_steps = reg.counter("serve.decode_steps")
+        c_chunks = reg.counter("serve.prefill_chunks")
+        probe_every = tel.sparsity_every if tel.enabled else 0
+        sched = Scheduler(self.n_slots, telemetry=tel, allocator=alloc)
+        self._last_sched = sched
+        sched.submit_many(requests, now=0.0)
+        tables = geo.empty_tables(self.n_slots)
+        chunk = self.prefill_chunk
+        n_chunks = 0
+        prefillq: "deque" = deque()  # slots mid-prompt, FIFO
+        with use_rules(self.rules):
+            cache = self.new_paged_cache()
+            tokens = np.zeros((self.n_slots, 1), np.int32)
+            pos = np.zeros((self.n_slots,), np.int32)
+            n_steps = 0
+            t0 = time.perf_counter()
+            while sched.has_work:
+                with tracer.span("schedule.admit"):
+                    admitted = sched.admit(now=time.perf_counter() - t0,
+                                           chunked=True)
+                for slot in admitted:
+                    self._sparsity.reset_row(slot.index)
+                    geo.set_chain(tables, slot.index,
+                                  alloc.chain(slot.request.uid))
+                    prefillq.append(slot)
+                # ONE chunk per iteration: prefill progress is interleaved
+                # with decode so in-flight slots keep emitting tokens.
+                if prefillq:
+                    slot = prefillq[0]
+                    req = slot.request
+                    start = slot.prefill_pos
+                    ln = min(chunk, len(req.prompt) - start)
+                    buf = np.zeros((1, chunk), np.int32)
+                    buf[0, :ln] = np.asarray(req.prompt[start:start + ln],
+                                             np.int32)
+                    t_pre = time.perf_counter()
+                    with tracer.span("prefill.chunk", uid=req.uid,
+                                     start=start, chunk_len=ln):
+                        logits, cache = self._chunk_jit(
+                            self.params, cache, jnp.asarray(buf),
+                            jnp.asarray(tables[slot.index:slot.index + 1]),
+                            jnp.int32(start), jnp.int32(ln))
+                    h_chunk.observe(time.perf_counter() - t_pre)
+                    c_chunks.inc()
+                    n_chunks += 1
+                    slot.prefill_pos += ln
+                    if not slot.prefilling:   # last chunk -> first token
+                        prefillq.popleft()
+                        self.prefill_calls += 1
+                        reg.counter("serve.prefill_calls").inc()
+                        row = np.asarray(logits[0, ln - 1])
+                        with tracer.span("sample"):
+                            first = sample_token(row, req.sampling,
+                                                 slot.rng)
+                        sched.record_token(slot, first,
+                                           now=time.perf_counter() - t0)
+                        tokens[slot.index, 0] = first
+                        pos[slot.index] = slot.pos  # == len(prompt)
+                # budget-1 requests finish at prefill
+                for slot in sched.retire_done(now=time.perf_counter() - t0):
+                    geo.clear_chain(tables, slot.index)
+                active = sched.decoding_slots()
+                g_queue.set(len(sched.queue))
+                g_active.set(len(active))
+                g_occ.set(len(active) / self.n_slots)
+                if not active:
+                    continue
+                # Null the page-table rows of slots sitting this step out
+                # (free, or mid-prefill): their stale token/pos rows still
+                # ride the batch, but their writes sink to the null page.
+                step_tables = tables.copy()
+                decoding = {s.index for s in active}
+                for i in range(self.n_slots):
+                    if i not in decoding:
+                        step_tables[i, :] = NULL_PAGE
+                obs_ctx = (observe_dispatch(self._dispatch.on_event)
+                           if tel.enabled and not self._dispatch.sealed
+                           else contextlib.nullcontext())
+                probed = probe_every > 0 and n_steps % probe_every == 0
+                t_step = time.perf_counter()
+                with tracer.span("decode.step", probed=probed), obs_ctx:
+                    step_in = ({"tokens": jnp.asarray(tokens)},
+                               jnp.asarray(pos), jnp.asarray(step_tables))
+                    if probed:
+                        logits, cache, sp_aux = self._step_paged_probed(
+                            self.params, cache, *step_in)
+                    else:
+                        logits, cache = self._step_paged(
+                            self.params, cache, *step_in)
+                    logits = np.asarray(logits)
+                self._dispatch.seal()
+                dt_step = time.perf_counter() - t_step
+                h_step.observe(dt_step)
+                h_step_recent.observe(dt_step)
+                c_steps.inc()
+                n_steps += 1
+                if probed:
+                    self._sparsity.update(
+                        sp_aux, self._sparsity_meta,
+                        active_rows=[s.index for s in active])
+                now = time.perf_counter() - t0
+                with tracer.span("sample"):
+                    for slot in active:
+                        nxt = sample_token(logits[slot.index],
+                                           slot.request.sampling, slot.rng)
+                        sched.record_token(slot, nxt, now=now)
+                        tokens[slot.index, 0] = nxt
+                        slot.pos += 1
+                        pos[slot.index] = slot.pos
+                for slot in sched.retire_done(now=time.perf_counter() - t0):
+                    geo.clear_chain(tables, slot.index)
+            dt = time.perf_counter() - t0
+        alloc.check()
+        if alloc.used_pages:
+            raise RuntimeError(f"{alloc.used_pages} KV pages still held "
+                               "after the queue drained")
+        total = sum(len(v) for v in sched.finished.values())
+        stats = {
+            "wall_s": dt,
+            "tok_s": total / dt if dt else float("inf"),
+            "decode_steps": n_steps,
+            "prefill_calls": self.prefill_calls,
+            "prefill_chunks": n_chunks,
+            "pages_capacity": alloc.capacity,
+            "page_size": geo.page_size,
+            "ttft_s": dict(sched.ttft),
+        }
+        if tel.enabled:
+            tel.emit({"kind": "snapshot",
+                      "metrics": self.metrics_snapshot()})
+        return sched.finished, stats
+
     # -- telemetry read side -------------------------------------------------
     def metrics_snapshot(self) -> dict:
         """JSON-ready snapshot of everything the telemetry layer measured.
@@ -316,7 +559,10 @@ class Engine:
           wall-clock totals and span counts from the tracer;
         * ``requests`` — per-request lifecycle records
           (enqueue/admit/first-token/finish times, token counts, ITL
-          aggregates) keyed by uid;
+          aggregates) keyed by uid.  The table covers EVERY submitted
+          request: ones still queued or decoding at snapshot time appear
+          with ``status`` "queued"/"in_flight" and partial timings, not
+          silently dropped;
         * ``sparsity`` — per-layer realized k/N and cross-step winner
           overlap from the probed decode steps, plus the staged
           execution-path attribution (topk/hadamard/dense × backend,
@@ -387,6 +633,19 @@ def main():
                     default=None,
                     help="kernel executor override for the sparse paths "
                     "(default: the config's own setting)")
+    ap.add_argument("--kv-layout", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="KV cache layout: 'paged' decouples KV memory "
+                    "from max_seq*slots (block allocator + chunked "
+                    "prefill); 'contiguous' is the parity oracle")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="token rows per KV page (paged layout)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV pool size in pages (default: full backing, "
+                    "slots*ceil(max_seq/page_size)+1)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill chunk rows, multiple of page-size "
+                    "(default: 4 pages)")
     ap.add_argument("--telemetry", action="store_true",
                     help="enable runtime telemetry (repro.obs) and print "
                     "a metrics snapshot at end of run")
@@ -405,7 +664,9 @@ def main():
         telemetry = Telemetry.on(jsonl_path=args.telemetry_jsonl)
     engine = Engine(cfg, mesh, max_seq=args.prompt_len + args.gen + 1,
                     n_slots=args.slots, use_pallas=args.use_pallas,
-                    telemetry=telemetry)
+                    telemetry=telemetry, kv_layout=args.kv_layout,
+                    page_size=args.page_size, n_pages=args.n_pages,
+                    prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

@@ -23,6 +23,8 @@ from repro.core.api import SparsityConfig
 from repro.core.layers import (apply_kwta, linear_apply, linear_init,
                                packed_linear_apply, packed_linear_init)
 from repro.obs.sparsity import observe_site
+from repro.runtime.kvcache import paged_view, paged_write_chunk, \
+    paged_write_rows
 from repro.sharding.context import constrain
 from .common import apply_rope, normal_init
 
@@ -161,10 +163,18 @@ def _flash_attn(q, k, v, scale, block: int, unroll: bool = False):
     return out.swapaxes(1, 2).astype(q.dtype)  # (B, S, H, Dh)
 
 
-def _gqa_forward(params, x, cfg, positions):
+def _gqa_forward(params, x, cfg, positions, quantize_kv: bool = False):
     """Full causal self-attention. Returns (y, k_rows, v_rows) where
     k_rows/v_rows are the roped true-head K/V — exactly what the decode
-    cache stores per position (the fused-prefill bulk write)."""
+    cache stores per position (the fused-prefill bulk write).
+
+    ``quantize_kv`` (int8 cache prefill): attention reads the
+    quantize→dequantize roundtrip of K/V instead of the exact rows —
+    the cache *representation* — so fused prefill sees exactly what
+    chunked prefill and every later decode step will read back, keeping
+    the contiguous engine a token-exact oracle for the paged one.
+    ``k_rows``/``v_rows`` stay exact: storage quantizes the originals.
+    """
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     hp = cfg.padded_heads
     sp = cfg.proj_sparsity
@@ -174,6 +184,11 @@ def _gqa_forward(params, x, cfg, positions):
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     k_rows, v_rows = k, v
+    if quantize_kv:
+        kq, ks = _quant_rows(k)
+        vq, vs = _quant_rows(v)
+        k = kq.astype(x.dtype) * ks[..., None].astype(x.dtype)
+        v = vq.astype(x.dtype) * vs[..., None].astype(x.dtype)
     k = _repeat_kv(k, h // hkv)
     v = _repeat_kv(v, h // hkv)
     q, k, v = (_pad_heads(t, hp) for t in (q, k, v))
@@ -214,9 +229,13 @@ def gqa_prefill(params, x, cfg, positions, max_seq: int):
     bucket-pads the prompt — and are only safe because decode overwrites
     row ``pos`` before its validity mask ever reads it; no consumer may
     assume they are meaningful (or zero).
+    With an int8 cache, attention reads the quantized representation
+    (see ``_gqa_forward(quantize_kv=...)``) so the fused path stays a
+    token-exact oracle for chunked paged prefill.
     Returns (y, cache) with the same cache pytree as gqa_cache_init."""
-    y, k, v = _gqa_forward(params, x, cfg, positions)
-    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+    int8 = getattr(cfg, "kv_cache_dtype", "") == "int8"
+    y, k, v = _gqa_forward(params, x, cfg, positions, quantize_kv=int8)
+    if int8:
         kq, ks = _quant_rows(k)
         vq, vs = _quant_rows(v)
         cache = {"k": _pad_seq(kq, max_seq), "v": _pad_seq(vq, max_seq),
@@ -342,7 +361,63 @@ def gqa_cache_specs(cfg=None):
     return specs
 
 
-def gqa_decode(params, x, cfg, cache, pos):
+def _kv_update(cache, k, v, cfg, pos, pos_b, pages):
+    """Write the new K/V row(s) and return ``(new_cache, k_view, v_view)``
+    where the views are the readable (dequantized) full-length caches.
+
+    ``pages=None`` — contiguous layout: masked/owner write into the
+    (B, max_seq, ...) cache, the view IS the cache.
+    ``pages`` given — paged layout: scatter each slot's row into its page
+    chain (:func:`repro.runtime.kvcache.paged_write_rows`) and gather the
+    (B, view_len, ...) slot-logical read view.  Inactive slots' page
+    tables are all null, so their stale writes land in the null page.
+    """
+    if pages is None:
+        write = lambda c, n: _cache_write(c, n, pos, cfg.cache_write)
+        view = lambda c: c
+    else:
+        write = lambda c, n: paged_write_rows(c, n[:, 0], pages, pos_b)
+        view = lambda c: paged_view(c, pages)
+    new_cache = {}
+    if "k_scale" in cache:  # int8-quantized cache (beyond-paper)
+        kq, ks = _quant_rows(k)
+        vq, vs = _quant_rows(v)
+        new_cache["k"] = write(cache["k"], kq)
+        new_cache["v"] = write(cache["v"], vq)
+        new_cache["k_scale"] = write(cache["k_scale"], ks)
+        new_cache["v_scale"] = write(cache["v_scale"], vs)
+        k_view = (view(new_cache["k"]).astype(k.dtype)
+                  * view(new_cache["k_scale"])[..., None].astype(k.dtype))
+        v_view = (view(new_cache["v"]).astype(k.dtype)
+                  * view(new_cache["v_scale"])[..., None].astype(k.dtype))
+    else:
+        new_cache["k"] = write(cache["k"], k)
+        new_cache["v"] = write(cache["v"], v)
+        k_view = view(new_cache["k"])
+        v_view = view(new_cache["v"])
+    return new_cache, k_view, v_view
+
+
+def _gqa_cache_attn(params, x, q, k_view, v_view, valid, cfg):
+    """Attention of (B, S_q, H, Dh) queries over a full-length cache view
+    with a broadcastable validity mask ``valid`` (B|1, S_q|1, V) — the
+    shared tail of the decode step and the chunked-prefill step."""
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hp = cfg.padded_heads
+    q = _pad_heads(q, hp)
+    kf = _pad_heads(_repeat_kv(k_view, h // hkv), hp)
+    vf = _pad_heads(_repeat_kv(v_view, h // hkv), hp)
+    scale = 1.0 / np.sqrt(dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    out = _mask_dummy_heads(out, cfg)
+    return _o_proj(params["o"], out.reshape(*x.shape[:-1], hp * dh),
+                   cfg.proj_sparsity)
+
+
+def gqa_decode(params, x, cfg, cache, pos, pages=None):
     """One-token decode step. x: (B, 1, D); pos: scalar current position,
     or a (B,) vector of per-row positions (continuous batching — each slot
     sits at its own depth in the cache).
@@ -351,6 +426,11 @@ def gqa_decode(params, x, cfg, cache, pos):
     the full cache with a validity mask (positions > pos are masked).  With
     the cache sequence axis sharded ("kvseq" -> model/SP), GSPMD turns the
     softmax reductions into cross-shard collectives.
+
+    With ``pages`` (a (B, n_blocks) int32 page table) the cache leaves are
+    the PAGED pool ``(n_pages, page_size, ...)``: the row write scatters
+    into each slot's own page chain and attention runs over the gathered
+    per-slot view — same math, same mask, decoupled memory.
     """
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     sp = cfg.proj_sparsity
@@ -361,33 +441,61 @@ def gqa_decode(params, x, cfg, cache, pos):
     v = _split_heads(_proj_apply(params["v"], x, sp), hkv, dh)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache, k_view, v_view = _kv_update(cache, k, v, cfg, pos, pos_b,
+                                           pages)
+    valid = (jnp.arange(k_view.shape[1])[None, None, :]
+             <= pos_b[:, None, None])
+    y = _gqa_cache_attn(params, x, q, k_view, v_view, valid, cfg)
+    return y, new_cache
+
+
+def gqa_chunk_prefill(params, x, cfg, cache, pages, pos_start, chunk_len):
+    """Chunked prefill over the PAGED cache: forward C prompt tokens of
+    ONE slot at absolute positions [pos_start, pos_start + C), scattering
+    their K/V rows into the slot's page chain and attending causally to
+    the gathered history (earlier chunks are already in the pool).  Rows
+    past ``chunk_len`` are bucket padding: their K/V is redirected to the
+    null page and their outputs are garbage the caller ignores.
+
+    x: (1, C, D); pages: (1, n_blocks) int32; pos_start/chunk_len:
+    scalars (traced — one compile per chunk bucket, not per length).
+    Returns (y (1, C, D), new_cache with pool-shaped leaves)."""
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sp = cfg.proj_sparsity
+    b, c, _ = x.shape
+    pos0 = jnp.asarray(pos_start, jnp.int32)
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos0 + offs, (b, c))
+    q = _split_heads(_proj_apply(params["q"], x, sp), h, dh)
+    k = _split_heads(_proj_apply(params["k"], x, sp), hkv, dh)
+    v = _split_heads(_proj_apply(params["v"], x, sp), hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    write = lambda pool, rows: paged_write_chunk(pool, rows, pages[0],
+                                                 pos0, chunk_len)
     new_cache = {}
     if "k_scale" in cache:  # int8-quantized cache (beyond-paper)
         kq, ks = _quant_rows(k)
         vq, vs = _quant_rows(v)
-        new_cache["k"] = _cache_write(cache["k"], kq, pos, cfg.cache_write)
-        new_cache["v"] = _cache_write(cache["v"], vq, pos, cfg.cache_write)
-        new_cache["k_scale"] = _cache_write(cache["k_scale"], ks, pos, cfg.cache_write)
-        new_cache["v_scale"] = _cache_write(cache["v_scale"], vs, pos, cfg.cache_write)
-        k_cache = (new_cache["k"].astype(x.dtype)
-                   * new_cache["k_scale"][..., None].astype(x.dtype))
-        v_cache = (new_cache["v"].astype(x.dtype)
-                   * new_cache["v_scale"][..., None].astype(x.dtype))
+        new_cache["k"] = write(cache["k"], kq[0])
+        new_cache["v"] = write(cache["v"], vq[0])
+        new_cache["k_scale"] = write(cache["k_scale"], ks[0])
+        new_cache["v_scale"] = write(cache["v_scale"], vs[0])
+        k_view = (paged_view(new_cache["k"], pages).astype(x.dtype)
+                  * paged_view(new_cache["k_scale"],
+                               pages)[..., None].astype(x.dtype))
+        v_view = (paged_view(new_cache["v"], pages).astype(x.dtype)
+                  * paged_view(new_cache["v_scale"],
+                               pages)[..., None].astype(x.dtype))
     else:
-        new_cache["k"] = k_cache = _cache_write(cache["k"], k, pos, cfg.cache_write)
-        new_cache["v"] = v_cache = _cache_write(cache["v"], v, pos, cfg.cache_write)
-    hp = cfg.padded_heads
-    q = _pad_heads(q, hp)
-    kf = _pad_heads(_repeat_kv(k_cache, h // hkv), hp)
-    vf = _pad_heads(_repeat_kv(v_cache, h // hkv), hp)
-    scale = 1.0 / np.sqrt(dh)
-    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
-    valid = jnp.arange(kf.shape[1])[None, :] <= pos_b[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
-    out = _mask_dummy_heads(out, cfg)
-    y = _o_proj(params["o"], out.reshape(*x.shape[:-1], hp * dh), sp)
+        new_cache["k"] = write(cache["k"], k[0])
+        new_cache["v"] = write(cache["v"], v[0])
+        k_view = paged_view(new_cache["k"], pages)
+        v_view = paged_view(new_cache["v"], pages)
+    # causal in slot-logical coordinates: chunk row j sees cols <= pos0+j
+    valid = (jnp.arange(k_view.shape[1])[None, None, :]
+             <= (pos0 + offs)[None, :, None])
+    y = _gqa_cache_attn(params, x, q, k_view, v_view, valid, cfg)
     return y, new_cache
 
 
@@ -474,24 +582,69 @@ def mla_prefill(params, x, cfg, positions, max_seq: int):
     return y, {"ckv": _pad_seq(c_kv, max_seq), "kpe": _pad_seq(k_pe, max_seq)}
 
 
-def mla_decode(params, x, cfg, cache, pos):
+def _mla_cache_attn(params, x, q_nope, q_pe, ckv_view, kpe_view, valid, cfg):
+    """MLA attention over full-length latent-cache views with a
+    broadcastable validity mask ``valid`` (B|1, S_q|1, V) — the shared
+    tail of the decode step and the chunked-prefill step."""
     h, dh, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
-    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
-    positions = pos_b[:, None]
-    q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
-    ckv_c = _cache_write(cache["ckv"], c_kv, pos, cfg.cache_write)
-    kpe_c = _cache_write(cache["kpe"], k_pe, pos, cfg.cache_write)
-    k_nope, v = _mla_expand(params, ckv_c, cfg, x.dtype)
+    k_nope, v = _mla_expand(params, ckv_view, cfg, x.dtype)
     q = jnp.concatenate([q_nope, q_pe], axis=-1)
     k = jnp.concatenate([k_nope,
-                         jnp.broadcast_to(kpe_c[..., None, :],
-                                          (*kpe_c.shape[:-1], h, dr))],
+                         jnp.broadcast_to(kpe_view[..., None, :],
+                                          (*kpe_view.shape[:-1], h, dr))],
                         axis=-1)
     scale = 1.0 / np.sqrt(dh + dr)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
-    valid = jnp.arange(k.shape[1])[None, :] <= pos_b[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[:, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
-    y = out.reshape(*x.shape[:-1], h * dh) @ params["o"].astype(x.dtype)
-    return y, {"ckv": ckv_c, "kpe": kpe_c}
+    return out.reshape(*x.shape[:-1], h * dh) @ params["o"].astype(x.dtype)
+
+
+def mla_decode(params, x, cfg, cache, pos, pages=None):
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    positions = pos_b[:, None]
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
+    if pages is None:
+        new_cache = {
+            "ckv": _cache_write(cache["ckv"], c_kv, pos, cfg.cache_write),
+            "kpe": _cache_write(cache["kpe"], k_pe, pos, cfg.cache_write),
+        }
+        ckv_view, kpe_view = new_cache["ckv"], new_cache["kpe"]
+    else:
+        new_cache = {
+            "ckv": paged_write_rows(cache["ckv"], c_kv[:, 0], pages, pos_b),
+            "kpe": paged_write_rows(cache["kpe"], k_pe[:, 0], pages, pos_b),
+        }
+        ckv_view = paged_view(new_cache["ckv"], pages)
+        kpe_view = paged_view(new_cache["kpe"], pages)
+    valid = (jnp.arange(ckv_view.shape[1])[None, None, :]
+             <= pos_b[:, None, None])
+    y = _mla_cache_attn(params, x, q_nope, q_pe, ckv_view, kpe_view, valid,
+                        cfg)
+    return y, new_cache
+
+
+def mla_chunk_prefill(params, x, cfg, cache, pages, pos_start, chunk_len):
+    """Chunked MLA prefill over the PAGED latent cache — the MLA
+    counterpart of :func:`gqa_chunk_prefill` (same contract: x (1, C, D),
+    pages (1, n_blocks), traced pos_start/chunk_len, padded rows sink to
+    the null page)."""
+    b, c, _ = x.shape
+    pos0 = jnp.asarray(pos_start, jnp.int32)
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos0 + offs, (b, c))
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(params, x, cfg, positions)
+    new_cache = {
+        "ckv": paged_write_chunk(cache["ckv"], c_kv[0], pages[0], pos0,
+                                 chunk_len),
+        "kpe": paged_write_chunk(cache["kpe"], k_pe[0], pages[0], pos0,
+                                 chunk_len),
+    }
+    ckv_view = paged_view(new_cache["ckv"], pages)
+    kpe_view = paged_view(new_cache["kpe"], pages)
+    valid = (jnp.arange(ckv_view.shape[1])[None, None, :]
+             <= (pos0 + offs)[None, :, None])
+    y = _mla_cache_attn(params, x, q_nope, q_pe, ckv_view, kpe_view, valid,
+                        cfg)
+    return y, new_cache

@@ -117,12 +117,15 @@ def _block_cache_init(kind: str, cfg, batch: int, max_seq: int, dtype):
     return init(cfg, batch, dtype), specs()
 
 
-def _block_decode(kind: str, params, x, cfg, cache, pos):
-    """One-token step. Returns (x, new_cache)."""
+def _block_decode(kind: str, params, x, cfg, cache, pos, pages=None):
+    """One-token step. Returns (x, new_cache).  ``pages`` (the paged KV
+    layout's per-slot page table) is attention-only: SSM blocks keep O(1)
+    recurrence state and have no per-position rows to page."""
     if kind in ("attn", "shared_attn"):
         h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
         dec = A.mla_decode if cfg.use_mla else A.gqa_decode
-        h, new_cache = dec(params["mixer"], h, cfg, cache, pos)
+        h, new_cache = dec(params["mixer"], h, cfg, cache, pos,
+                           pages=pages)
         x = x + h
         h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
         if "moe" in params:
@@ -131,6 +134,10 @@ def _block_decode(kind: str, params, x, cfg, cache, pos):
         elif "ffn" in params:
             x = x + ffn_apply(params["ffn"], h, cfg.ffn_sparsity, cfg.act)
         return x, new_cache
+    if pages is not None:
+        raise NotImplementedError(
+            f"paged KV layout not implemented for block kind {kind!r} "
+            "(SSM decode state has no sequence axis to page)")
     h = rmsnorm_apply(params["norm"], x, cfg.norm_eps)
     dec = {"mamba2": S.mamba2_decode, "mlstm": S.mlstm_decode,
            "slstm": S.slstm_decode}[kind]
@@ -275,6 +282,36 @@ def init_cache(cfg, batch: int, max_seq: int):
     return cache, specs
 
 
+def init_paged_cache(cfg, n_pages: int, page_size: int):
+    """Stacked per-unit PAGED caches: every attention leaf is a page
+    pool ``(n_units, n_pages, page_size, ...)`` addressed through the
+    per-slot page tables that :func:`serve_step` / :func:`prefill_chunk`
+    take as ``pages`` (see :mod:`repro.runtime.kvcache`).  Pool geometry
+    replaces the contiguous ``(batch, kvseq)`` axes, so the same
+    per-block inits produce the leaves; the sharding spec replicates the
+    pool axes (pages are not sharded — page ids must stay global).
+
+    Attention-only block patterns (paged layout pages per-position KV
+    rows; SSM decode state is O(1) and has nothing to page)."""
+    if not all(k in ("attn", "shared_attn") for k in cfg.block_pattern):
+        raise NotImplementedError(
+            "paged KV layout requires an attention-only block pattern, "
+            f"got {cfg.block_pattern}")
+    ct = dtype_of(cfg.compute_dtype)
+    unit_cache, unit_specs = {}, {}
+    for i, kind in enumerate(cfg.block_pattern):
+        c, sp = _block_cache_init(kind, cfg, n_pages, page_size, ct)
+        unit_cache[f"b{i}"] = c
+        unit_specs[f"b{i}"] = jax.tree.map(
+            lambda s: (None, None) + tuple(s)[2:], sp, is_leaf=_is_spec)
+    cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_units, *x.shape)), unit_cache)
+    specs = jax.tree.map(
+        lambda sp: (None,) + tuple(sp), unit_specs,
+        is_leaf=_is_spec)
+    return cache, specs
+
+
 def supports_fused_prefill(cfg) -> bool:
     """Fused bulk-cache prefill exists for attention blocks; SSM/hybrid
     patterns fall back to stepwise prefill (their decode state is the
@@ -341,12 +378,16 @@ def prefill(params, batch, cfg, max_seq: int):
     return constrain(logits, "batch", "seq", "vocab"), cache
 
 
-def serve_step(params, cache, batch, pos, cfg):
+def serve_step(params, cache, batch, pos, cfg, pages=None):
     """Decode one token given caches of past state.
 
     batch: {"tokens": (B, 1)} (or {"embeds": (B, 1, D)}).
     pos: scalar position (static batch) or (B,) per-slot positions
     (continuous batching).
+    pages: optional (B, n_blocks) int32 per-slot page tables — the cache
+    leaves are then the :func:`init_paged_cache` pools and every
+    attention read/write goes through the page indirection (same math,
+    same mask; token-exact vs the contiguous layout).
     Returns (logits (B, vocab), new_cache).
 
     Sparse-sparse decode runs the fused pipeline per layer: the FFN's
@@ -371,7 +412,7 @@ def serve_step(params, cache, batch, pos, cfg):
             with jax.named_scope(f"b{i}_{kind}"), \
                     obs_sparsity.observe_site(f"b{i}"):
                 x, new_cache[f"b{i}"] = _block_decode(
-                    kind, p, x, cfg, unit_cache[f"b{i}"], pos)
+                    kind, p, x, cfg, unit_cache[f"b{i}"], pos, pages)
         # Realized-sparsity capture handoff: when the serving engine's
         # probed step is tracing, the winner sets observed inside this
         # body leave the scan as stacked (n_units, ...) outputs.  With no
@@ -386,6 +427,71 @@ def serve_step(params, cache, batch, pos, cfg):
     table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
     logits = (x @ table.astype(ct).T)[:, 0]
     return constrain(logits, "batch", "vocab"), new_cache
+
+
+def _block_chunk_prefill(kind: str, params, x, cfg, cache, pages,
+                         pos_start, chunk_len):
+    """Chunked-prefill step of one block over the paged cache.
+    Returns (x, new_cache)."""
+    if kind not in ("attn", "shared_attn"):
+        raise NotImplementedError(
+            f"chunked prefill not implemented for block kind {kind!r}")
+    h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+    pre = A.mla_chunk_prefill if cfg.use_mla else A.gqa_chunk_prefill
+    h, new_cache = pre(params["mixer"], h, cfg, cache, pages, pos_start,
+                       chunk_len)
+    x = x + h
+    h = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+    if "moe" in params:
+        h, _ = moe_apply(params["moe"], h, cfg, cfg.ffn_sparsity)
+        x = x + h
+    elif "ffn" in params:
+        x = x + ffn_apply(params["ffn"], h, cfg.ffn_sparsity, cfg.act)
+    return x, new_cache
+
+
+def prefill_chunk(params, cache, batch, pos_start, chunk_len, cfg, pages):
+    """Forward ONE page-aligned prompt chunk of ONE slot through every
+    block, scattering its KV rows into the slot's page chains (the paged
+    layout's incremental prefill — long prompts run as a sequence of
+    these interleaved with decode steps instead of one monolithic
+    :func:`prefill` call).
+
+    batch: {"tokens": (1, C)}; pages: (1, n_blocks) int32 — the
+    prefilling slot's page table; pos_start / chunk_len: traced scalars,
+    so chunks of any true length share one compile per C bucket (rows
+    past ``chunk_len`` are bucket padding: their KV sinks to the null
+    page and their logits are garbage the engine ignores).
+    Returns (logits (1, C, vocab), new_cache) with pool-shaped leaves.
+    """
+    ct = dtype_of(cfg.compute_dtype)
+    if cfg.frontend == "embed":
+        x = batch["embeds"].astype(ct)
+    else:
+        x = jnp.take(params["embed"]["table"].astype(ct), batch["tokens"],
+                     axis=0)
+    shared = params.get("shared")
+
+    def unit_fn(x, scanned):
+        unit_params, unit_cache = scanned
+        new_cache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            p = shared if kind == "shared_attn" else unit_params[f"b{i}"]
+            with jax.named_scope(f"b{i}_{kind}"), \
+                    obs_sparsity.observe_site(f"b{i}"):
+                x, new_cache[f"b{i}"] = _block_chunk_prefill(
+                    kind, p, x, cfg, unit_cache[f"b{i}"], pages,
+                    pos_start, chunk_len)
+        # Same capture handoff as serve_step (empty tuple when inactive).
+        return x, (new_cache, obs_sparsity.drain_pending())
+
+    x, (new_cache, sparsity_aux) = lax.scan(unit_fn, x,
+                                            (params["units"], cache))
+    obs_sparsity.emit_stacked(sparsity_aux)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = (params["embed"] if cfg.tie_embeddings else params["head"])["table"]
+    logits = x @ table.astype(ct).T
+    return constrain(logits, "batch", "seq", "vocab"), new_cache
 
 
 def unit_step_fn(cfg):

@@ -26,14 +26,15 @@ from typing import Dict, Optional
 
 from .export import JsonlWriter, latency_columns, sparsity_columns
 from .metrics import (DEFAULT_LATENCY_EDGES_S, NULL_REGISTRY, Counter,
-                      Gauge, Histogram, Registry)
+                      Gauge, Histogram, Registry, RollingHistogram)
 from .sparsity import DispatchStats, SparsityStats
 from .trace import NULL_TRACER, Tracer
 
 __all__ = ["Telemetry", "Registry", "Counter", "Gauge", "Histogram",
-           "Tracer", "JsonlWriter", "SparsityStats", "DispatchStats",
-           "NULL_REGISTRY", "NULL_TRACER", "DEFAULT_LATENCY_EDGES_S",
-           "latency_columns", "sparsity_columns"]
+           "RollingHistogram", "Tracer", "JsonlWriter", "SparsityStats",
+           "DispatchStats", "NULL_REGISTRY", "NULL_TRACER",
+           "DEFAULT_LATENCY_EDGES_S", "latency_columns",
+           "sparsity_columns"]
 
 
 @dataclasses.dataclass

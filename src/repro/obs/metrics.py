@@ -29,10 +29,11 @@ from __future__ import annotations
 
 import math
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-__all__ = ["Counter", "Gauge", "Histogram", "Registry", "NULL_REGISTRY",
-           "DEFAULT_LATENCY_EDGES_S"]
+__all__ = ["Counter", "Gauge", "Histogram", "RollingHistogram", "Registry",
+           "NULL_REGISTRY", "DEFAULT_LATENCY_EDGES_S"]
 
 
 def _log_edges(lo: float, hi: float, per_decade: int) -> Tuple[float, ...]:
@@ -43,6 +44,18 @@ def _log_edges(lo: float, hi: float, per_decade: int) -> Tuple[float, ...]:
 #: Default latency bucket edges (seconds): 4 buckets per decade from
 #: 100 µs to ~178 s — spans a fast CPU decode step to a stuck request.
 DEFAULT_LATENCY_EDGES_S = _log_edges(1e-4, 100.0, 4)
+
+
+def _bucket_index(edges: Sequence[float], v: float) -> int:
+    """First bucket with ``v <= edge`` (binary search), else overflow."""
+    lo, hi = 0, len(edges)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if v <= edges[mid]:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
 
 
 class Counter:
@@ -146,15 +159,7 @@ class Histogram:
             self._max = -math.inf
 
     def _bucket(self, v: float) -> int:
-        # binary search over the (small, fixed) edge tuple
-        lo, hi = 0, len(self.edges)
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if v <= self.edges[mid]:
-                hi = mid
-            else:
-                lo = mid + 1
-        return lo
+        return _bucket_index(self.edges, v)
 
     @property
     def count(self) -> int:
@@ -206,6 +211,147 @@ class Histogram:
                 "p95": self.percentile(95.0),
                 "p99": self.percentile(99.0),
             }
+
+
+class RollingHistogram:
+    """Windowed percentiles: a ring of time-sliced sub-histograms.
+
+    A run-lifetime :class:`Histogram` answers "how has latency been since
+    start"; long-lived serving wants "how is latency NOW".  The window
+    ``[now - window_s, now)`` is covered by ``n_slices`` sub-histograms
+    of ``window_s / n_slices`` seconds each: ``observe`` lands in the
+    slice owning the current instant (lazily zeroing a slice whose old
+    epoch has expired — O(1) per observation, no background thread), and
+    ``percentile``/``snapshot`` merge only the slices still inside the
+    window.  Old mass thus ages out with slice granularity instead of
+    accumulating forever, at a fixed memory cost of
+    ``n_slices × len(edges)`` ints.
+
+    ``clock`` is injectable (tests drive a fake clock; default
+    ``time.monotonic``).
+    """
+
+    __slots__ = ("name", "unit", "edges", "window_s", "n_slices", "_lock",
+                 "_clock", "_slice_s", "_ids", "_counts", "_n", "_sum",
+                 "_min", "_max")
+
+    def __init__(self, name: str, unit: str, lock: threading.Lock,
+                 edges: Sequence[float] = DEFAULT_LATENCY_EDGES_S,
+                 window_s: float = 60.0, n_slices: int = 6, clock=None):
+        if not edges or list(edges) != sorted(edges):
+            raise ValueError(f"rolling histogram {name}: edges must be "
+                             f"ascending and non-empty, got {edges!r}")
+        if window_s <= 0 or n_slices < 1:
+            raise ValueError(f"rolling histogram {name}: need window_s > 0 "
+                             f"and n_slices >= 1, got {window_s}/{n_slices}")
+        self.name = name
+        self.unit = unit
+        self.edges = tuple(float(e) for e in edges)
+        self.window_s = float(window_s)
+        self.n_slices = int(n_slices)
+        self._lock = lock
+        self._clock = clock if clock is not None else time.monotonic
+        self._slice_s = self.window_s / self.n_slices
+        n = self.n_slices
+        self._ids = [-1] * n           # epoch owning each ring position
+        self._counts = [[0] * (len(self.edges) + 1) for _ in range(n)]
+        self._n = [0] * n
+        self._sum = [0.0] * n
+        self._min = [math.inf] * n
+        self._max = [-math.inf] * n
+
+    def _clear(self, i: int, sid: int) -> None:
+        self._ids[i] = sid
+        self._counts[i] = [0] * (len(self.edges) + 1)
+        self._n[i] = 0
+        self._sum[i] = 0.0
+        self._min[i] = math.inf
+        self._max[i] = -math.inf
+
+    def _slot(self, sid: int) -> int:
+        """Ring position for epoch ``sid``, zeroed if a stale epoch
+        still occupies it."""
+        i = sid % self.n_slices
+        if self._ids[i] != sid:
+            self._clear(i, sid)
+        return i
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            i = self._slot(int(self._clock() / self._slice_s))
+            self._counts[i][_bucket_index(self.edges, v)] += 1
+            self._n[i] += 1
+            self._sum[i] += v
+            self._min[i] = min(self._min[i], v)
+            self._max[i] = max(self._max[i], v)
+
+    def reset(self) -> None:
+        with self._lock:
+            for i in range(self.n_slices):
+                # -1 can sit inside the live window while sid < n_slices
+                # (start of a run), so the slice state must be zeroed too
+                self._clear(i, -1)
+
+    def _merged(self):
+        """(counts, count, sum, min, max) over the live window."""
+        sid = int(self._clock() / self._slice_s)
+        counts = [0] * (len(self.edges) + 1)
+        n, s, mn, mx = 0, 0.0, math.inf, -math.inf
+        for i in range(self.n_slices):
+            if not (sid - self.n_slices < self._ids[i] <= sid):
+                continue  # expired (or never-written) slice
+            for b, c in enumerate(self._counts[i]):
+                counts[b] += c
+            n += self._n[i]
+            s += self._sum[i]
+            mn = min(mn, self._min[i])
+            mx = max(mx, self._max[i])
+        return counts, n, s, mn, mx
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._merged()[1]
+
+    def _pct(self, counts, n, mn, mx, q: float) -> Optional[float]:
+        if n == 0:
+            return None
+        target = q / 100.0 * n
+        cum = 0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.edges[i - 1] if i > 0 else 0.0
+                hi = self.edges[i] if i < len(self.edges) else mx
+                lo = max(lo, mn)
+                hi = min(hi, mx)
+                if hi <= lo:
+                    return lo
+                frac = (target - cum) / c
+                return lo + frac * (hi - lo)
+            cum += c
+        return mx
+
+    def percentile(self, q: float) -> Optional[float]:
+        """Interpolated q-th percentile over the live window only."""
+        if not 0.0 <= q <= 100.0:
+            raise ValueError(f"percentile q={q} outside [0, 100]")
+        with self._lock:
+            counts, n, _, mn, mx = self._merged()
+        return self._pct(counts, n, mn, mx, q)
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            counts, n, s, mn, mx = self._merged()
+        if n == 0:
+            return {"count": 0, "window_s": self.window_s}
+        return {"count": n, "window_s": self.window_s, "sum": s,
+                "mean": s / n, "min": mn, "max": mx,
+                "p50": self._pct(counts, n, mn, mx, 50.0),
+                "p95": self._pct(counts, n, mn, mx, 95.0),
+                "p99": self._pct(counts, n, mn, mx, 99.0)}
 
 
 class _NullMetric:
@@ -281,6 +427,16 @@ class Registry:
                   ) -> Histogram:
         return self._get(name, Histogram, unit=unit, edges=edges)
 
+    def rolling_histogram(self, name: str, unit: str = "s",
+                          edges: Sequence[float] = DEFAULT_LATENCY_EDGES_S,
+                          window_s: float = 60.0, n_slices: int = 6,
+                          clock=None) -> RollingHistogram:
+        """Windowed-percentile histogram (see :class:`RollingHistogram`).
+        Construction kwargs apply on first registration only (idempotent
+        per name, like every accessor)."""
+        return self._get(name, RollingHistogram, unit=unit, edges=edges,
+                         window_s=window_s, n_slices=n_slices, clock=clock)
+
     def names(self) -> List[str]:
         with self._lock:
             return sorted(self._metrics)
@@ -308,6 +464,8 @@ class Registry:
             elif isinstance(m, Gauge):
                 out["gauges"][name] = m.snapshot()
             else:
+                # Histogram and RollingHistogram both serve percentile
+                # snapshots (the rolling one over its live window only).
                 out["histograms"][name] = m.snapshot()
         return out
 

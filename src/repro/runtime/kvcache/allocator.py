@@ -1,0 +1,141 @@
+"""Block-table allocator: fixed-size KV pages with per-request chains.
+
+The host-side half of the paged KV cache (the device-side half is
+:mod:`repro.runtime.kvcache.layout`).  The pool is ``n_pages`` physical
+pages of ``page_size`` token rows each; a request is admitted with a
+*chain* — an ordered list of page ids covering its worst-case length
+(prompt + max_new_tokens, the reserve-on-admit policy) — and logical
+slot position ``p`` lives in chain page ``p // page_size`` at row
+``p % page_size``.
+
+Design points:
+
+* **Page 0 is the null page** and is never allocated.  Retired slots'
+  page-table rows point at it, so a stale decode write from an inactive
+  batch row lands in memory nobody reads instead of a page that may
+  already belong to a new request.
+* **Free list is LIFO** (recently freed pages are re-issued first) —
+  keeps the hot working set small and makes use-after-free bugs loud in
+  tests.
+* **Copy-free reclamation**: ``release`` just returns the chain to the
+  free list.  No page is zeroed or copied: the next owner's attention
+  mask only ever covers positions its own prefill/decode already wrote
+  (``col <= pos``), so stale rows from the previous owner are
+  unreachable by construction (the parity tests pin this down).
+
+Pure Python — no jax — so allocation policy is unit/property-testable
+without compiling a model.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+__all__ = ["NULL_PAGE", "BlockAllocator"]
+
+#: Physical page id reserved as the write sink for inactive slots and
+#: padded chunk rows; never handed out by the allocator, never read by
+#: any active slot's gather (its page-table entries are all real pages
+#: up to the chain length, and positions past the chain are masked).
+NULL_PAGE = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over a fixed pool of KV pages."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if n_pages < 2:
+            raise ValueError(
+                f"n_pages must be >= 2 (page {NULL_PAGE} is the reserved "
+                f"null page), got {n_pages}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO free list over pages [1, n_pages); page 0 stays reserved.
+        self._free: List[int] = list(range(n_pages - 1, NULL_PAGE, -1))
+        self._chains: Dict[int, List[int]] = {}
+
+    # -- accounting -----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the null page is not allocatable)."""
+        return self.n_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.used_pages / self.capacity
+
+    def pages_needed(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` rows (>= 1 even for empty)."""
+        return max(1, -(-n_tokens // self.page_size))
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def chain(self, uid: int) -> List[int]:
+        """The live chain of ``uid`` (copy), for page-table assembly."""
+        return list(self._chains[uid])
+
+    def live_uids(self) -> List[int]:
+        return sorted(self._chains)
+
+    # -- alloc / free -----------------------------------------------------
+    def allocate(self, uid: int, n: int) -> List[int]:
+        """Reserve an ``n``-page chain for ``uid``.  Raises on double
+        allocation or insufficient free pages (callers gate admission
+        with :meth:`can_allocate`)."""
+        if uid in self._chains:
+            raise ValueError(f"request {uid} already holds a chain")
+        if n < 1:
+            raise ValueError(f"chain must be >= 1 page, got {n}")
+        if n > len(self._free):
+            raise MemoryError(
+                f"request {uid} needs {n} pages, only "
+                f"{len(self._free)} free")
+        chain = [self._free.pop() for _ in range(n)]
+        self._chains[uid] = chain
+        return list(chain)
+
+    def extend(self, uid: int, n_more: int) -> List[int]:
+        """Append ``n_more`` pages to ``uid``'s chain (for future
+        speculative/beam growth; unused by reserve-on-admit serving)."""
+        if uid not in self._chains:
+            raise KeyError(f"request {uid} holds no chain")
+        if n_more > len(self._free):
+            raise MemoryError(
+                f"request {uid} needs {n_more} more pages, only "
+                f"{len(self._free)} free")
+        new = [self._free.pop() for _ in range(n_more)]
+        self._chains[uid].extend(new)
+        return list(new)
+
+    def release(self, uid: int) -> List[int]:
+        """Return ``uid``'s whole chain to the free list (copy-free: the
+        pages are not touched).  Returns the reclaimed page ids."""
+        chain = self._chains.pop(uid, None)
+        if chain is None:
+            raise KeyError(f"request {uid} holds no chain")
+        self._free.extend(chain)
+        return chain
+
+    # -- invariant check (tests call this after every step) ---------------
+    def check(self) -> None:
+        """Assert structural invariants: no double-assignment, full
+        conservation, null page never issued."""
+        live = [p for c in self._chains.values() for p in c]
+        assert NULL_PAGE not in live, "null page was allocated"
+        assert NULL_PAGE not in self._free, "null page on the free list"
+        seen = set(live)
+        assert len(seen) == len(live), "page in two chains"
+        assert not (seen & set(self._free)), "page both live and free"
+        assert len(live) + len(self._free) == self.capacity, \
+            "pages leaked or invented"

@@ -1,0 +1,159 @@
+"""PagedKV layout: the device-side half of the paged KV cache.
+
+A contiguous decode cache stores leaf ``(B, max_seq, ...)``; the paged
+pool stores the same rows as ``(n_pages, page_size, ...)`` with a
+per-slot *page table* ``pages: (B, blocks_per_slot) int32`` mapping
+logical slot position ``p`` to physical row
+``pool[pages[b, p // page_size], p % page_size]``.
+
+Three staged primitives thread this layout through the decode jit —
+pure gather/scatter, no host transfer, no new Select (the sparsity
+linter checks the paged decode jaxpr like any other entry):
+
+* :func:`paged_view` — gather a slot-contiguous ``(B, view_len, ...)``
+  read view of every slot's chain (one ``jnp.take`` per leaf; attention
+  runs on the view exactly as it would on a contiguous cache, with the
+  same ``col <= pos`` validity mask in slot-logical coordinates).
+* :func:`paged_write_rows` — scatter one decode row per slot at its own
+  position (the continuous-batching write).  Inactive slots' page-table
+  rows are all :data:`NULL_PAGE`, so their stale writes land in the
+  null page.
+* :func:`paged_write_chunk` — scatter a prefill chunk's rows
+  (``C`` consecutive positions of ONE slot); rows past ``chunk_len``
+  (bucket padding) are redirected to the null page so they can never
+  clobber a neighbouring chain.
+
+:class:`PagedKV` carries the static geometry (page size, pool size,
+page-table width) and the host-side page-table assembly helpers the
+engine uses around the jit boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .allocator import NULL_PAGE
+
+__all__ = ["PagedKV", "paged_view", "paged_write_rows",
+           "paged_write_chunk", "NULL_PAGE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKV:
+    """Static geometry of one engine's paged KV cache."""
+
+    page_size: int        #: token rows per physical page
+    n_pages: int          #: physical pages in the pool (incl. null page 0)
+    blocks_per_slot: int  #: page-table width = ceil(max_seq / page_size)
+
+    @property
+    def view_len(self) -> int:
+        """Sequence length of the gathered per-slot read view (>= the
+        engine's max_seq; attention masks the overhang)."""
+        return self.blocks_per_slot * self.page_size
+
+    @classmethod
+    def build(cls, max_seq: int, n_slots: int, page_size: int = 16,
+              n_pages: Optional[int] = None) -> "PagedKV":
+        """Geometry for an engine: ``n_pages`` defaults to full backing
+        (every slot can hold max_seq rows, plus the null page) — pass a
+        smaller pool to actually decouple KV memory from
+        ``max_seq * n_slots`` and let admission gate on free pages."""
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        blocks = -(-max_seq // page_size)
+        if n_pages is None:
+            n_pages = n_slots * blocks + 1
+        if n_pages < blocks + 1:
+            raise ValueError(
+                f"n_pages={n_pages} cannot back even one max_seq request "
+                f"({blocks} pages + the null page)")
+        return cls(page_size=page_size, n_pages=n_pages,
+                   blocks_per_slot=blocks)
+
+    # -- host-side page-table assembly ------------------------------------
+    def empty_tables(self, n_slots: int) -> np.ndarray:
+        """(n_slots, blocks_per_slot) page tables, all null."""
+        return np.full((n_slots, self.blocks_per_slot), NULL_PAGE,
+                       np.int32)
+
+    def set_chain(self, tables: np.ndarray, slot: int,
+                  chain: Sequence[int]) -> None:
+        """Install a request's chain in ``tables[slot]`` (rest null)."""
+        if len(chain) > self.blocks_per_slot:
+            raise ValueError(
+                f"chain of {len(chain)} pages exceeds the page-table "
+                f"width {self.blocks_per_slot}")
+        tables[slot, :] = NULL_PAGE
+        tables[slot, :len(chain)] = np.asarray(chain, np.int32)
+
+    def clear_chain(self, tables: np.ndarray, slot: int) -> None:
+        """Point a retired slot's page table back at the null page."""
+        tables[slot, :] = NULL_PAGE
+
+    def chunk_spans(self, n_tokens: int, chunk: int) -> List[tuple]:
+        """Split a prompt into page-aligned prefill chunks:
+        ``[(start, length), ...]`` with every start a multiple of
+        ``chunk`` (itself a multiple of page_size) and lengths summing
+        to ``n_tokens``."""
+        if chunk < 1 or chunk % self.page_size:
+            raise ValueError(
+                f"prefill chunk {chunk} must be a positive multiple of "
+                f"page_size {self.page_size}")
+        return [(s, min(chunk, n_tokens - s))
+                for s in range(0, n_tokens, chunk)]
+
+
+# ---------------------------------------------------------------------------
+# Staged gather/scatter (jax; imported lazily by the model code)
+# ---------------------------------------------------------------------------
+
+def paged_view(pool, pages):
+    """Gather the slot-contiguous read view.
+
+    pool:  (n_pages, page_size, ...)
+    pages: (B, n_blocks) int32 page table
+    ->     (B, n_blocks * page_size, ...)
+    """
+    import jax.numpy as jnp
+    b, n_blk = pages.shape
+    v = jnp.take(pool, pages.reshape(-1), axis=0)
+    return v.reshape(b, n_blk * pool.shape[1], *pool.shape[2:])
+
+
+def paged_write_rows(pool, rows, pages, pos):
+    """Scatter one row per slot at its own logical position.
+
+    pool:  (n_pages, page_size, ...)
+    rows:  (B, ...) — one new cache row per slot
+    pages: (B, n_blocks) int32; pos: (B,) int32 logical positions
+    """
+    import jax.numpy as jnp
+    p = pool.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    blk = jnp.clip(pos // p, 0, pages.shape[1] - 1)
+    page = jnp.take_along_axis(pages, blk[:, None], axis=1)[:, 0]
+    return pool.at[page, pos % p].set(rows.astype(pool.dtype))
+
+
+def paged_write_chunk(pool, rows, pages_row, pos_start, chunk_len):
+    """Scatter a prefill chunk: C consecutive rows of ONE slot.
+
+    pool:      (n_pages, page_size, ...)
+    rows:      (C, ...) — the chunk's new cache rows
+    pages_row: (n_blocks,) int32 — the prefilling slot's page table
+    pos_start: scalar int32 — absolute position of the chunk's first row
+    chunk_len: scalar int32 — true rows; rows past it are bucket padding
+               and are redirected to the null page.
+    """
+    import jax.numpy as jnp
+    p = pool.shape[1]
+    c = rows.shape[0]
+    j = jnp.arange(c, dtype=jnp.int32)
+    pos = jnp.asarray(pos_start, jnp.int32) + j
+    blk = jnp.clip(pos // p, 0, pages_row.shape[0] - 1)
+    page = jnp.where(j < chunk_len, pages_row[blk], NULL_PAGE)
+    return pool.at[page, pos % p].set(rows.astype(pool.dtype))

@@ -51,7 +51,12 @@ class Request:
 class RequestRecord:
     """Lifecycle of one request through the engine, in seconds relative
     to the serve loop's epoch.  ``itl_*`` aggregate the inter-token
-    latencies (gaps between consecutive sampled tokens after the first)."""
+    latencies (gaps between consecutive sampled tokens after the first).
+
+    ``status`` tracks where the request is in its lifecycle
+    ("queued" -> "in_flight" -> "finished"), so a metrics snapshot taken
+    mid-serve reports requests still decoding instead of silently
+    dropping them from the per-request table."""
     uid: int
     t_enqueue: float = 0.0
     t_admit: float = 0.0
@@ -61,6 +66,7 @@ class RequestRecord:
     itl_sum: float = 0.0
     itl_count: int = 0
     itl_max: float = 0.0
+    status: str = "queued"
 
     @property
     def queue_wait_s(self) -> float:
@@ -73,6 +79,7 @@ class RequestRecord:
     def to_event(self) -> Dict:
         """The ``kind="request"`` JSONL event (schema: repro.obs.export)."""
         ev = {"kind": "request", "uid": self.uid,
+              "status": self.status,
               "t_enqueue": round(self.t_enqueue, 6),
               "t_admit": round(self.t_admit, 6),
               "t_first_token": round(self.t_first_token, 6),
@@ -97,10 +104,19 @@ class Slot:
     admit_time: float = 0.0
     first_token_time: float = 0.0
     last_token_time: float = 0.0
+    prefill_pos: int = 0            # prompt tokens already prefilled
 
     @property
     def busy(self) -> bool:
         return self.request is not None
+
+    @property
+    def prefilling(self) -> bool:
+        """Chunked prefill in progress: prompt rows not yet all written.
+        The slot holds pages but does not join the decode batch until the
+        engine finishes feeding its prompt chunks."""
+        return (self.request is not None
+                and self.prefill_pos < len(self.request.prompt))
 
     @property
     def done(self) -> bool:
@@ -129,15 +145,26 @@ def sample_token(logits: np.ndarray, params: SamplingParams,
 
 
 class Scheduler:
-    """FIFO admission into a fixed pool of decode slots."""
+    """FIFO admission into a fixed pool of decode slots.
 
-    def __init__(self, n_slots: int, telemetry=None):
+    With ``allocator`` (a :class:`repro.runtime.kvcache.BlockAllocator`)
+    admission is additionally gated on KV pages: the queue head is
+    admitted only when its worst-case footprint
+    (``pages_needed(len(prompt) + max_new_tokens)`` — reserve-on-admit,
+    so decode can never run out of pages mid-request) fits the free
+    list.  Strict FIFO: a blocked head blocks everything behind it (no
+    starvation of long prompts by short ones).  Retirement releases the
+    chain copy-free.
+    """
+
+    def __init__(self, n_slots: int, telemetry=None, allocator=None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if telemetry is None:
             from repro.obs import Telemetry
             telemetry = Telemetry.off()
         self.telemetry = telemetry
+        self.allocator = allocator
         self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
         self.queue: Deque[Request] = deque()
         self.finished: Dict[int, List[int]] = {}
@@ -150,6 +177,17 @@ class Scheduler:
         self._h_wait = reg.histogram("serve.queue_wait_s")
         self._h_ttft = reg.histogram("serve.ttft_s")
         self._h_itl = reg.histogram("serve.itl_s")
+        # windowed twin: recent inter-token latency for long-lived serving
+        self._h_itl_recent = reg.rolling_histogram("serve.itl_recent_s")
+        self._g_pages_used = reg.gauge("serve.pages_used")
+        self._g_pages_free = reg.gauge("serve.pages_free")
+        self._g_occupancy = reg.gauge("serve.page_occupancy")
+
+    def _update_page_gauges(self) -> None:
+        if self.allocator is not None:
+            self._g_pages_used.set(self.allocator.used_pages)
+            self._g_pages_free.set(self.allocator.free_pages)
+            self._g_occupancy.set(self.allocator.occupancy)
 
     # -- queue side ---------------------------------------------------------
     def submit(self, request: Request, now: float = 0.0) -> None:
@@ -174,14 +212,33 @@ class Scheduler:
     def active_slots(self) -> List[Slot]:
         return [s for s in self.slots if s.busy]
 
-    def admit(self, now: float = 0.0) -> List[Slot]:
+    def decoding_slots(self) -> List[Slot]:
+        """Busy slots whose prompt is fully in the cache — the rows that
+        participate in this iteration's decode step (chunk-prefilling
+        slots sit out until their last chunk lands)."""
+        return [s for s in self.slots if s.busy and not s.prefilling]
+
+    def admit(self, now: float = 0.0, chunked: bool = False) -> List[Slot]:
         """Move queued requests into free slots (FIFO). Returns the slots
-        that were (re)filled this call; the engine prefills each one."""
+        that were (re)filled this call; the engine prefills each one.
+
+        ``chunked=True`` admits with ``prefill_pos = 0`` (the engine
+        feeds the prompt as paged chunks and advances ``prefill_pos``);
+        otherwise the prompt is assumed fused-prefilled at admit, as
+        before.  With an allocator, the queue head must also fit the
+        free pages (strict FIFO — a blocked head blocks the rest)."""
         admitted = []
         for slot in self.slots:
             if slot.busy or not self.queue:
                 continue
-            req = self.queue.popleft()
+            req = self.queue[0]
+            if self.allocator is not None:
+                need = self.allocator.pages_needed(
+                    len(req.prompt) + req.max_new_tokens)
+                if not self.allocator.can_allocate(need):
+                    break  # head-of-line blocking: keep FIFO order
+                self.allocator.allocate(req.uid, need)
+            self.queue.popleft()
             slot.request = req
             slot.pos = len(req.prompt)
             slot.generated = []
@@ -189,11 +246,14 @@ class Scheduler:
             slot.admit_time = now
             slot.first_token_time = 0.0
             slot.last_token_time = 0.0
+            slot.prefill_pos = 0 if chunked else len(req.prompt)
             rec = self.records.get(req.uid)
             if rec is not None:
                 rec.t_admit = now
+                rec.status = "in_flight"
                 self._h_wait.observe(rec.queue_wait_s)
             admitted.append(slot)
+        self._update_page_gauges()
         return admitted
 
     def record_token(self, slot: Slot, token: int, now: float = 0.0) -> None:
@@ -207,6 +267,7 @@ class Scheduler:
         else:
             itl = max(0.0, now - slot.last_token_time)
             self._h_itl.observe(itl)
+            self._h_itl_recent.observe(itl)
             if rec is not None:
                 rec.itl_sum += itl
                 rec.itl_count += 1
@@ -228,9 +289,14 @@ class Scheduler:
                 rec = self.records.get(slot.request.uid)
                 if rec is not None:
                     rec.t_finish = now
+                    rec.status = "finished"
                     self.telemetry.emit(rec.to_event())
+                if self.allocator is not None:
+                    self.allocator.release(slot.request.uid)
                 self._c_finished.inc()
                 retired.append(dataclasses.replace(slot))
                 slot.request = None
                 slot.rng = None
+        if retired:
+            self._update_page_gauges()
         return retired

@@ -19,7 +19,8 @@ from repro.obs import sparsity as obs_sparsity
 from repro.obs.export import (JsonlWriter, latency_columns,
                               sparsity_columns, validate_event,
                               validate_jsonl)
-from repro.obs.metrics import NULL_REGISTRY, Histogram, Registry
+from repro.obs.metrics import (NULL_REGISTRY, Histogram, Registry,
+                               RollingHistogram)
 from repro.obs.sparsity import DispatchStats, SparsityStats
 from repro.obs.trace import Tracer
 from repro.runtime.monitor import LossGuard, StepMonitor
@@ -114,6 +115,106 @@ def test_disabled_registry_hands_out_shared_null():
 
 
 # ---------------------------------------------------------------------------
+# rolling histogram: windowed percentiles with an injected clock
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    """Injectable monotonic clock the tests drive by hand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_rolling_histogram_window_expiry():
+    import threading
+    clk = _FakeClock()
+    # window 6 s in 3 slices of 2 s
+    h = RollingHistogram("r", "s", threading.Lock(), edges=(1.0, 2.0, 4.0),
+                         window_s=6.0, n_slices=3, clock=clk)
+    h.observe(0.5)          # slice epoch 0
+    clk.t = 2.5
+    h.observe(3.0)          # slice epoch 1
+    assert h.count == 2     # both inside the window
+    clk.t = 6.1             # epoch 3: slice 0's mass (epoch 0) expired
+    assert h.count == 1
+    assert h.snapshot()["min"] == pytest.approx(3.0)
+    clk.t = 9.0             # past everything
+    assert h.count == 0
+    assert h.snapshot() == {"count": 0, "window_s": 6.0}
+    assert h.percentile(95.0) is None
+
+
+def test_rolling_histogram_merges_live_slices():
+    import threading
+    clk = _FakeClock()
+    edges = (1.0, 2.0, 4.0)
+    roll = RollingHistogram("r", "s", threading.Lock(), edges=edges,
+                            window_s=6.0, n_slices=3, clock=clk)
+    flat = Histogram("h", "s", threading.Lock(), edges=edges)
+    # same observations spread across two live slices must merge to the
+    # same percentile estimates the run-lifetime histogram computes
+    for t, v in ((0.1, 0.5), (0.2, 1.5), (2.1, 3.0), (2.2, 8.0)):
+        clk.t = t
+        roll.observe(v)
+        flat.observe(v)
+    for q in (50.0, 95.0, 100.0):
+        assert roll.percentile(q) == pytest.approx(flat.percentile(q))
+    s = roll.snapshot()
+    assert s["count"] == 4 and s["sum"] == pytest.approx(13.0)
+    assert s["window_s"] == 6.0
+
+
+def test_rolling_histogram_ring_reuses_slots():
+    import threading
+    clk = _FakeClock()
+    h = RollingHistogram("r", "s", threading.Lock(), edges=(1.0,),
+                         window_s=2.0, n_slices=2, clock=clk)
+    # epoch 0 and epoch 2 share ring position 0: the stale epoch must be
+    # zeroed when the slot is reused, not accumulated into
+    h.observe(0.5)
+    clk.t = 2.1             # epoch 2 evicts epoch 0 lazily on write
+    h.observe(0.5)
+    assert h.count == 1
+
+
+def test_rolling_histogram_validation_and_reset():
+    import threading
+    lock = threading.Lock()
+    with pytest.raises(ValueError):
+        RollingHistogram("bad", "s", lock, edges=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        RollingHistogram("bad", "s", lock, window_s=0.0)
+    with pytest.raises(ValueError):
+        RollingHistogram("bad", "s", lock, n_slices=0)
+    h = RollingHistogram("r", "s", lock, edges=(1.0,), clock=_FakeClock())
+    with pytest.raises(ValueError):
+        h.percentile(-1.0)
+    h.observe(0.5)
+    h.reset()
+    assert h.count == 0
+
+
+def test_rolling_histogram_registry_accessor():
+    reg = Registry()
+    clk = _FakeClock()
+    h = reg.rolling_histogram("w", window_s=10.0, n_slices=2, clock=clk)
+    assert reg.rolling_histogram("w") is h  # idempotent per name
+    with pytest.raises(TypeError):
+        reg.histogram("w")  # kind mismatch with the plain histogram
+    h.observe(0.01)
+    snap = reg.snapshot()["histograms"]["w"]
+    assert snap["count"] == 1 and snap["window_s"] == 10.0
+    reg.reset()
+    assert reg.snapshot()["histograms"]["w"] == {"count": 0,
+                                                 "window_s": 10.0}
+    # the disabled registry hands the shared null out here too
+    assert NULL_REGISTRY.rolling_histogram("w").snapshot() is None
+
+
+# ---------------------------------------------------------------------------
 # tracer: nesting, totals, JSONL schema
 # ---------------------------------------------------------------------------
 
@@ -205,6 +306,30 @@ def test_scheduler_lifecycle_8_requests_4_slots(tmp_path):
         assert validate_event(rec.to_event()) == []
     n, errors = validate_jsonl(path)
     assert errors == [] and n == 8  # one request event per retirement
+
+
+def test_request_record_status_marks_in_flight():
+    """A snapshot taken mid-serve reports queued/in-flight requests with
+    their partial timings instead of dropping them (ISSUE 9 bugfix)."""
+    s = Scheduler(1)
+    reqs = [Request(uid=i, prompt=[1, 2], max_new_tokens=2)
+            for i in range(2)]
+    s.submit_many(reqs, now=0.0)
+    assert {r.status for r in s.records.values()} == {"queued"}
+    s.admit(now=0.1)
+    # uid 0 occupies the only slot; uid 1 still queued
+    assert s.records[0].status == "in_flight"
+    assert s.records[1].status == "queued"
+    ev = s.records[0].to_event()
+    assert ev["status"] == "in_flight" and ev["t_finish"] == 0.0
+    assert validate_event(ev) == []
+    for slot in s.active_slots():
+        s.record_token(slot, 5, now=0.2)
+        s.record_token(slot, 5, now=0.3)
+    s.retire_done(now=0.3)
+    assert s.records[0].status == "finished"
+    assert s.records[0].to_event()["status"] == "finished"
+    assert s.records[1].status == "queued"  # untouched by retirement
 
 
 # ---------------------------------------------------------------------------
