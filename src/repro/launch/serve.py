@@ -35,13 +35,22 @@ parity tests compare against.
 
 Paged KV cache (ISSUE 9): ``Engine(kv_layout="paged")`` swaps the
 ``(n_slots, max_seq)`` contiguous cache for a pool of fixed-size pages
-(:mod:`repro.runtime.kvcache`) — admission reserves each request's
-worst-case page chain, prompts prefill in page-aligned chunks interleaved
-with decode steps (one chunk per loop iteration, bounding the ITL spike
-in-flight requests see when a long prompt lands), decode reads/writes
-through per-slot page tables threaded into the jit, and retirement
-returns pages copy-free.  Token-exact vs the contiguous layout (greedy),
-which stays the default and the parity oracle.
+(:mod:`repro.runtime.kvcache`) — prompts prefill in page-aligned chunks
+interleaved with decode steps (one chunk per loop iteration, bounding the
+ITL spike in-flight requests see when a long prompt lands), decode
+reads/writes through per-slot page tables threaded into the jit, and
+retirement returns pages copy-free.  Token-exact vs the contiguous
+layout (greedy), which stays the default and the parity oracle.
+
+Grow-on-demand chains (ISSUE 10): ``kv_policy="grow"`` (the paged
+default) admits on the PROMPT footprint only and grows each chain one
+page at a time as decode crosses page boundaries; when the pool runs
+dry the youngest-admitted slot is preempted (recompute-on-resume) so
+concurrency no longer pays every request's worst case up front.
+Requests sharing a prompt prefix share physical pages (hash-matched at
+admit) with copy-on-write on first divergent write.
+``kv_policy="reserve"`` keeps the ISSUE 9 reserve-on-admit behaviour as
+the scheduling oracle.
 
 Telemetry (ISSUE 8): pass ``telemetry=repro.obs.Telemetry.on(...)`` and
 the engine traces spans around every stage (``schedule.admit`` /
@@ -67,6 +76,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Optional, Sequence
@@ -82,7 +92,8 @@ from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.obs import DispatchStats, SparsityStats, Telemetry
 from repro.obs import sparsity as obs_sparsity
-from repro.runtime.kvcache import NULL_PAGE, BlockAllocator, PagedKV
+from repro.runtime.kvcache import (NULL_PAGE, BlockAllocator, PagedKV,
+                                   prefix_keys)
 from repro.runtime.scheduler import (Request, SamplingParams, Scheduler,
                                      sample_token)
 from repro.sharding import make_rules, param_sharding, use_rules
@@ -112,10 +123,14 @@ class Engine:
                  telemetry: Optional[Telemetry] = None,
                  kv_layout: str = "contiguous", page_size: int = 16,
                  n_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 kv_policy: str = "grow"):
         if kv_layout not in ("contiguous", "paged"):
             raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
                              f"got {kv_layout!r}")
+        if kv_policy not in ("reserve", "grow"):
+            raise ValueError(f"kv_policy must be 'reserve' or 'grow', "
+                             f"got {kv_policy!r}")
         if use_pallas is not None:
             cfg = dataclasses.replace(
                 cfg,
@@ -145,6 +160,7 @@ class Engine:
         self.prefill_calls = 0  # one per admitted prompt (tests assert)
         # -- paged KV layout --------------------------------------------------
         self.kv_layout = kv_layout
+        self.kv_policy = kv_policy
         self.kv_geo: Optional[PagedKV] = None
         if kv_layout == "paged":
             self.kv_geo = PagedKV.build(max_seq, n_slots,
@@ -166,6 +182,11 @@ class Engine:
                 lambda p, c, toks, pg, start, ln: T.prefill_chunk(
                     p, c, {"tokens": toks}, start, ln, cfg, pg),
                 donate_argnums=(1,))
+            # copy-on-write break: clone page src's rows onto dst in every
+            # pool leaf (traced ids -> one compile, reused for every CoW)
+            self._copy_page_jit = jax.jit(
+                lambda c, src, dst: T.copy_cache_page(c, src, dst),
+                donate_argnums=(0,))
 
             def _probed_step_paged(p, c, b, pos, pg):
                 with obs_sparsity.capture_supports() as cap:
@@ -268,6 +289,10 @@ class Engine:
                 raise ValueError(f"request {r.uid}: max_new_tokens must "
                                  "be >= 1 (the first token comes from "
                                  "prefill)")
+            if len(r.prompt) < 1:
+                raise ValueError(f"request {r.uid}: prompt must hold at "
+                                 "least one token (the first sampled "
+                                 "token conditions on it)")
             if len(r.prompt) + r.max_new_tokens > self.max_seq:
                 raise ValueError(
                     f"request {r.uid}: prompt {len(r.prompt)} + "
@@ -383,9 +408,23 @@ class Engine:
 
         Differences from the contiguous loop:
 
-        * Admission is gated on FREE PAGES, not just free slots: the
-          queue head reserves ``ceil((prompt + max_new) / page_size)``
-          pages at admit, so decode can never run out mid-request.
+        * Admission is gated on FREE PAGES, not just free slots.  Under
+          ``kv_policy="reserve"`` the queue head reserves
+          ``ceil((prompt + max_new) / page_size)`` pages at admit, so
+          decode can never run out mid-request.  Under ``"grow"`` (the
+          default) it takes only its PROMPT pages — minus any prefix
+          pages adopted from the allocator's hash index — and decode
+          pages arrive lazily: each iteration extends every decoding
+          slot's chain (oldest-admitted first) to cover its next write,
+          preempting the youngest-admitted slot when the pool is dry
+          (recompute-on-resume; pre-validation of every request's
+          worst case against the whole pool makes a sole survivor
+          always able to finish, so eviction cannot livelock).
+        * Writes into a page held by more than one chain break the
+          sharing first: the allocator swaps in a private page and one
+          compiled ``copy_page`` call clones the rows device-side
+          (copy-on-write), so prefix sharing never changes any
+          request's tokens.
         * A long prompt no longer stalls in-flight decode for its whole
           prefill: each iteration forwards at most ONE page-aligned
           chunk of the oldest prefilling slot, then decodes the slots
@@ -396,6 +435,10 @@ class Engine:
           slots that are free or still prefilling are nulled for the
           step, so their (ignored) writes sink into the null page
           instead of a live chain.
+
+        ``REPRO_KV_CHECK=1`` runs ``alloc.check()`` every loop iteration
+        (instead of only on drain) — the paranoid mode the fuzz harness
+        and the CI paged-smoke step serve under.
         """
         geo = self.kv_geo
         alloc = BlockAllocator(geo.n_pages, geo.page_size)
@@ -405,6 +448,8 @@ class Engine:
                 raise ValueError(
                     f"request {r.uid}: needs {need} KV pages, pool holds "
                     f"{alloc.capacity} — raise n_pages")
+        grow = self.kv_policy == "grow"
+        paranoid = os.environ.get("REPRO_KV_CHECK") == "1"
         tel = self.telemetry
         tracer = tel.tracer
         reg = tel.registry
@@ -416,14 +461,66 @@ class Engine:
         h_step_recent = reg.rolling_histogram("serve.decode_step_recent_s")
         c_steps = reg.counter("serve.decode_steps")
         c_chunks = reg.counter("serve.prefill_chunks")
+        c_cow = reg.counter("serve.cow_copies")
+        c_grow = reg.counter("serve.kv_grow_pages")
         probe_every = tel.sparsity_every if tel.enabled else 0
-        sched = Scheduler(self.n_slots, telemetry=tel, allocator=alloc)
+        sched = Scheduler(self.n_slots, telemetry=tel, allocator=alloc,
+                          kv_policy=self.kv_policy)
         self._last_sched = sched
         sched.submit_many(requests, now=0.0)
         tables = geo.empty_tables(self.n_slots)
         chunk = self.prefill_chunk
+        ps = geo.page_size
         n_chunks = 0
+        n_cow = 0
+        n_grown = 0
+        max_concurrent = 0
         prefillq: "deque" = deque()  # slots mid-prompt, FIFO
+
+        def _evict(victim):
+            """Preempt ``victim``: null its page table, drop it from the
+            prefill queue, hand the request back to the scheduler
+            (pages released, request re-queued at the head)."""
+            geo.clear_chain(tables, victim.index)
+            if victim in prefillq:
+                prefillq.remove(victim)
+            sched.preempt(victim, now=time.perf_counter() - t0)
+
+        def _ensure_free(n, requester):
+            """Free >= ``n`` pages by preempting youngest-admitted slots
+            (least service lost, FIFO order preserved on requeue).
+            Returns False when ``requester`` itself was the victim —
+            the caller's slot is gone and its work this iteration is
+            abandoned."""
+            while alloc.free_pages < n:
+                victim = sched.preemption_victim()
+                if victim is None:
+                    raise RuntimeError(
+                        "KV pool exhausted with no slot to preempt")
+                _evict(victim)
+                if victim is requester:
+                    return False
+            return True
+
+        def _cow(slot, blk):
+            """Break sharing of chain page ``blk`` before ``slot``
+            writes there.  Returns False when the slot lost its chain
+            while freeing a page for the copy."""
+            nonlocal cache, n_cow
+            uid = slot.request.uid
+            if not alloc.page_shared(uid, blk):
+                return True
+            if alloc.free_pages < 1 and not _ensure_free(1, slot):
+                return False
+            old, new = alloc.cow_page(uid, blk)
+            with tracer.span("kv.cow", uid=uid, block=blk):
+                cache = self._copy_page_jit(cache, jnp.int32(old),
+                                            jnp.int32(new))
+            geo.set_chain(tables, slot.index, alloc.chain(uid))
+            n_cow += 1
+            c_cow.inc()
+            return True
+
         with use_rules(self.rules):
             cache = self.new_paged_cache()
             tokens = np.zeros((self.n_slots, 1), np.int32)
@@ -431,6 +528,8 @@ class Engine:
             n_steps = 0
             t0 = time.perf_counter()
             while sched.has_work:
+                if paranoid:
+                    alloc.check()
                 with tracer.span("schedule.admit"):
                     admitted = sched.admit(now=time.perf_counter() - t0,
                                            chunked=True)
@@ -439,6 +538,8 @@ class Engine:
                     geo.set_chain(tables, slot.index,
                                   alloc.chain(slot.request.uid))
                     prefillq.append(slot)
+                max_concurrent = max(max_concurrent,
+                                     len(sched.active_slots()))
                 # ONE chunk per iteration: prefill progress is interleaved
                 # with decode so in-flight slots keep emitting tokens.
                 if prefillq:
@@ -446,24 +547,44 @@ class Engine:
                     req = slot.request
                     start = slot.prefill_pos
                     ln = min(chunk, len(req.prompt) - start)
-                    buf = np.zeros((1, chunk), np.int32)
-                    buf[0, :ln] = np.asarray(req.prompt[start:start + ln],
-                                             np.int32)
-                    t_pre = time.perf_counter()
-                    with tracer.span("prefill.chunk", uid=req.uid,
-                                     start=start, chunk_len=ln):
-                        logits, cache = self._chunk_jit(
-                            self.params, cache, jnp.asarray(buf),
-                            jnp.asarray(tables[slot.index:slot.index + 1]),
-                            jnp.int32(start), jnp.int32(ln))
-                    h_chunk.observe(time.perf_counter() - t_pre)
-                    c_chunks.inc()
-                    n_chunks += 1
-                    slot.prefill_pos += ln
-                    if not slot.prefilling:   # last chunk -> first token
+                    # chunk rows may land in adopted prefix pages (an
+                    # exact-duplicate prompt re-prefills its final token
+                    # into the sharer's last page): break the sharing
+                    # first.  _cow can preempt, including this very
+                    # slot — then skip the chunk, the request is back in
+                    # the queue.
+                    ok = True
+                    if grow:
+                        for blk in range(start // ps,
+                                         (start + ln - 1) // ps + 1):
+                            if not _cow(slot, blk):
+                                ok = False
+                                break
+                    if ok:
+                        buf = np.zeros((1, chunk), np.int32)
+                        buf[0, :ln] = np.asarray(
+                            req.prompt[start:start + ln], np.int32)
+                        t_pre = time.perf_counter()
+                        with tracer.span("prefill.chunk", uid=req.uid,
+                                         start=start, chunk_len=ln):
+                            logits, cache = self._chunk_jit(
+                                self.params, cache, jnp.asarray(buf),
+                                jnp.asarray(
+                                    tables[slot.index:slot.index + 1]),
+                                jnp.int32(start), jnp.int32(ln))
+                        h_chunk.observe(time.perf_counter() - t_pre)
+                        c_chunks.inc()
+                        n_chunks += 1
+                        slot.prefill_pos += ln
+                    if ok and not slot.prefilling:  # last chunk
                         prefillq.popleft()
                         self.prefill_calls += 1
                         reg.counter("serve.prefill_calls").inc()
+                        if grow:
+                            # rows are on device now — publish the
+                            # prompt's pages for later prefix matches
+                            alloc.register_chain_prefix(
+                                req.uid, prefix_keys(req.prompt, ps))
                         row = np.asarray(logits[0, ln - 1])
                         with tracer.span("sample"):
                             first = sample_token(row, req.sampling,
@@ -475,6 +596,34 @@ class Engine:
                 # budget-1 requests finish at prefill
                 for slot in sched.retire_done(now=time.perf_counter() - t0):
                     geo.clear_chain(tables, slot.index)
+                if grow:
+                    # grow every decoding slot's chain to cover its next
+                    # write, oldest-admitted first (the youngest is the
+                    # preemption victim, so growing oldest-first means a
+                    # victim's freed pages go to the slots that keep
+                    # running).  A slot evicted by an earlier _ensure_free
+                    # in this very loop shows up as not busy — skip it.
+                    for slot in sorted(sched.decoding_slots(),
+                                       key=lambda s: s.admit_seq):
+                        if not slot.busy:
+                            continue
+                        uid = slot.request.uid
+                        evicted = False
+                        while alloc.chain_len(uid) <= slot.pos // ps:
+                            if alloc.free_pages < 1 \
+                                    and not _ensure_free(1, slot):
+                                evicted = True
+                                break
+                            alloc.extend(uid, 1)
+                            n_grown += 1
+                            c_grow.inc()
+                        if evicted or not slot.busy:
+                            continue
+                        # the write row may sit in a page adopted from a
+                        # prompt-prefix match: break the sharing first
+                        if not _cow(slot, slot.pos // ps):
+                            continue
+                        geo.set_chain(tables, slot.index, alloc.chain(uid))
                 active = sched.decoding_slots()
                 g_queue.set(len(sched.queue))
                 g_active.set(len(active))
@@ -539,6 +688,12 @@ class Engine:
             "prefill_chunks": n_chunks,
             "pages_capacity": alloc.capacity,
             "page_size": geo.page_size,
+            "kv_policy": self.kv_policy,
+            "max_concurrent": max_concurrent,
+            "preemptions": sched.preemption_count,
+            "prefix_hit_pages": sched.prefix_hit_pages,
+            "cow_copies": n_cow,
+            "grown_pages": n_grown,
             "ttft_s": dict(sched.ttft),
         }
         if tel.enabled:
@@ -646,6 +801,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prefill chunk rows, multiple of page-size "
                     "(default: 4 pages)")
+    ap.add_argument("--kv-policy", choices=("reserve", "grow"),
+                    default="grow",
+                    help="paged admission policy: 'grow' admits on the "
+                    "prompt footprint, extends chains lazily and preempts "
+                    "(recompute-on-resume) when the pool runs dry; "
+                    "'reserve' pins the worst case at admit (the "
+                    "scheduling oracle)")
     ap.add_argument("--telemetry", action="store_true",
                     help="enable runtime telemetry (repro.obs) and print "
                     "a metrics snapshot at end of run")
@@ -666,7 +828,8 @@ def main():
                     n_slots=args.slots, use_pallas=args.use_pallas,
                     telemetry=telemetry, kv_layout=args.kv_layout,
                     page_size=args.page_size, n_pages=args.n_pages,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    kv_policy=args.kv_policy)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab_size,

@@ -312,6 +312,17 @@ def init_paged_cache(cfg, n_pages: int, page_size: int):
     return cache, specs
 
 
+def copy_cache_page(cache, src, dst):
+    """Copy physical page ``src``'s rows over page ``dst`` in every pool
+    leaf of an :func:`init_paged_cache` cache — the device half of a
+    copy-on-write break (the allocator already swapped ``dst`` into the
+    writer's chain; this materialises the shared rows there before the
+    writer's next scatter lands).  src/dst: scalar int32 page ids; leaf
+    layout ``(n_units, n_pages, page_size, ...)``."""
+    return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]),
+                        cache)
+
+
 def supports_fused_prefill(cfg) -> bool:
     """Fused bulk-cache prefill exists for attention blocks; SSM/hybrid
     patterns fall back to stepwise prefill (their decode state is the

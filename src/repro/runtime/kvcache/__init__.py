@@ -11,9 +11,10 @@ See ``src/repro/runtime/README.md`` for the layout, admission policy,
 and chunked-prefill schedule.
 """
 
-from .allocator import NULL_PAGE, BlockAllocator
-from .layout import (PagedKV, paged_view, paged_write_chunk,
+from .allocator import NULL_PAGE, BlockAllocator, prefix_keys
+from .layout import (PagedKV, copy_page, paged_view, paged_write_chunk,
                      paged_write_rows)
 
-__all__ = ["BlockAllocator", "NULL_PAGE", "PagedKV", "paged_view",
-           "paged_write_rows", "paged_write_chunk"]
+__all__ = ["BlockAllocator", "NULL_PAGE", "PagedKV", "copy_page",
+           "paged_view", "paged_write_rows", "paged_write_chunk",
+           "prefix_keys"]

@@ -22,6 +22,10 @@ linter checks the paged decode jaxpr like any other entry):
   (``C`` consecutive positions of ONE slot); rows past ``chunk_len``
   (bucket padding) are redirected to the null page so they can never
   clobber a neighbouring chain.
+* :func:`copy_page` — copy one physical page's rows to another (the
+  device half of copy-on-write: the allocator swaps a private page
+  into the chain, this moves the shared page's rows over before the
+  owner's next write lands).
 
 :class:`PagedKV` carries the static geometry (page size, pool size,
 page-table width) and the host-side page-table assembly helpers the
@@ -37,7 +41,7 @@ import numpy as np
 
 from .allocator import NULL_PAGE
 
-__all__ = ["PagedKV", "paged_view", "paged_write_rows",
+__all__ = ["PagedKV", "copy_page", "paged_view", "paged_write_rows",
            "paged_write_chunk", "NULL_PAGE"]
 
 
@@ -157,3 +161,12 @@ def paged_write_chunk(pool, rows, pages_row, pos_start, chunk_len):
     blk = jnp.clip(pos // p, 0, pages_row.shape[0] - 1)
     page = jnp.where(j < chunk_len, pages_row[blk], NULL_PAGE)
     return pool.at[page, pos % p].set(rows.astype(pool.dtype))
+
+
+def copy_page(pool, src, dst):
+    """Copy page ``src``'s rows over page ``dst`` (copy-on-write break).
+
+    pool: (n_pages, page_size, ...); src/dst: scalar int32 page ids.
+    One gather + one scatter per leaf, jit-safe with traced ids.
+    """
+    return pool.at[dst].set(pool[src])

@@ -24,10 +24,13 @@ and the records still accumulate (they are plain Python, ~100 B each).
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.runtime.kvcache import prefix_keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +70,7 @@ class RequestRecord:
     itl_count: int = 0
     itl_max: float = 0.0
     status: str = "queued"
+    preemptions: int = 0            # times evicted and re-queued
 
     @property
     def queue_wait_s(self) -> float:
@@ -86,7 +90,8 @@ class RequestRecord:
               "t_finish": round(self.t_finish, 6),
               "n_tokens": self.n_tokens,
               "queue_wait_s": round(self.queue_wait_s, 6),
-              "ttft_s": round(self.ttft_s, 6)}
+              "ttft_s": round(self.ttft_s, 6),
+              "preemptions": self.preemptions}
         if self.itl_count:
             ev["itl_mean_s"] = round(self.itl_sum / self.itl_count, 6)
             ev["itl_max_s"] = round(self.itl_max, 6)
@@ -105,6 +110,7 @@ class Slot:
     first_token_time: float = 0.0
     last_token_time: float = 0.0
     prefill_pos: int = 0            # prompt tokens already prefilled
+    admit_seq: int = -1             # monotonic admission order (LRU key)
 
     @property
     def busy(self) -> bool:
@@ -148,28 +154,54 @@ class Scheduler:
     """FIFO admission into a fixed pool of decode slots.
 
     With ``allocator`` (a :class:`repro.runtime.kvcache.BlockAllocator`)
-    admission is additionally gated on KV pages: the queue head is
-    admitted only when its worst-case footprint
-    (``pages_needed(len(prompt) + max_new_tokens)`` — reserve-on-admit,
-    so decode can never run out of pages mid-request) fits the free
-    list.  Strict FIFO: a blocked head blocks everything behind it (no
-    starvation of long prompts by short ones).  Retirement releases the
-    chain copy-free.
+    admission is additionally gated on KV pages, under one of two
+    policies (``kv_policy``):
+
+    * ``"reserve"`` (reserve-on-admit, the PR 9 oracle): the queue head
+      needs its worst-case footprint
+      ``pages_needed(len(prompt) + max_new_tokens)`` free, reserved in
+      full at admit, so decode can never run out of pages mid-request.
+    * ``"grow"`` (grow-on-demand): the head needs only
+      ``pages_needed(len(prompt))`` — minus any prompt-prefix pages
+      already live in the allocator's prefix index, which are adopted
+      by reference (``serve.prefix_hit_pages``).  Decode pages are
+      allocated lazily by the engine (``BlockAllocator.extend`` at page
+      boundaries); when the pool runs dry the engine preempts the
+      youngest-admitted slot (:meth:`preemption_victim` /
+      :meth:`preempt` — recompute-on-resume: pages released, request
+      re-queued at the head with its generated tokens appended to the
+      prompt, sampling state stashed so greedy AND stochastic decoding
+      resume token-exactly).
+
+    Strict FIFO either way: a blocked head blocks everything behind it
+    (no starvation of long prompts by short ones), and preemption evicts
+    youngest-first, so a re-queued victim is still older than everything
+    behind it.  Retirement releases the chain copy-free.
     """
 
-    def __init__(self, n_slots: int, telemetry=None, allocator=None):
+    def __init__(self, n_slots: int, telemetry=None, allocator=None,
+                 kv_policy: str = "reserve"):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
+        if kv_policy not in ("reserve", "grow"):
+            raise ValueError(
+                f"kv_policy must be 'reserve' or 'grow', got {kv_policy!r}")
         if telemetry is None:
             from repro.obs import Telemetry
             telemetry = Telemetry.off()
         self.telemetry = telemetry
         self.allocator = allocator
+        self.kv_policy = kv_policy
         self.slots: List[Slot] = [Slot(i) for i in range(n_slots)]
         self.queue: Deque[Request] = deque()
         self.finished: Dict[int, List[int]] = {}
         self.ttft: Dict[int, float] = {}  # uid -> time of first token
         self.records: Dict[int, RequestRecord] = {}
+        self._admit_seq = 0
+        # uid -> (generated, rng, first_token_time, last_token_time) of a
+        # preempted request, restored verbatim at re-admission so sampling
+        # and latency accounting continue as if never evicted
+        self._resume: Dict[int, Tuple] = {}
         reg = telemetry.registry
         self._c_submitted = reg.counter("serve.requests_submitted")
         self._c_finished = reg.counter("serve.requests_finished")
@@ -182,12 +214,21 @@ class Scheduler:
         self._g_pages_used = reg.gauge("serve.pages_used")
         self._g_pages_free = reg.gauge("serve.pages_free")
         self._g_occupancy = reg.gauge("serve.page_occupancy")
+        self._c_preemptions = reg.counter("serve.preemptions")
+        self._c_prefix_hits = reg.counter("serve.prefix_hit_pages")
+        # plain-int twins of the two counters above: stats and unit tests
+        # read these regardless of whether telemetry is enabled
+        self.preemption_count = 0
+        self.prefix_hit_pages = 0
+        self._paranoid = os.environ.get("REPRO_KV_CHECK") == "1"
 
     def _update_page_gauges(self) -> None:
         if self.allocator is not None:
             self._g_pages_used.set(self.allocator.used_pages)
             self._g_pages_free.set(self.allocator.free_pages)
             self._g_occupancy.set(self.allocator.occupancy)
+            if self._paranoid:
+                self.allocator.check()
 
     # -- queue side ---------------------------------------------------------
     def submit(self, request: Request, now: float = 0.0) -> None:
@@ -226,18 +267,43 @@ class Scheduler:
         feeds the prompt as paged chunks and advances ``prefill_pos``);
         otherwise the prompt is assumed fused-prefilled at admit, as
         before.  With an allocator, the queue head must also fit the
-        free pages (strict FIFO — a blocked head blocks the rest)."""
+        free pages (strict FIFO — a blocked head blocks the rest):
+        its worst-case footprint under ``kv_policy="reserve"``, just
+        its prompt under ``"grow"`` — where prompt-prefix pages already
+        in the allocator's index are adopted by reference and skipped
+        by chunked prefill (``prefill_pos`` starts past them, capped at
+        ``len(prompt) - 1`` so the final logits row is always produced
+        by a real chunk forward — an exact-duplicate prompt re-runs its
+        last token, whose shared-page write the engine breaks with
+        copy-on-write)."""
         admitted = []
         for slot in self.slots:
             if slot.busy or not self.queue:
                 continue
             req = self.queue[0]
+            shared_rows = 0
             if self.allocator is not None:
-                need = self.allocator.pages_needed(
-                    len(req.prompt) + req.max_new_tokens)
-                if not self.allocator.can_allocate(need):
-                    break  # head-of-line blocking: keep FIFO order
-                self.allocator.allocate(req.uid, need)
+                a = self.allocator
+                if self.kv_policy == "grow":
+                    shared = []
+                    if chunked:
+                        shared = a.match_prefix(
+                            prefix_keys(req.prompt, a.page_size))
+                    need = a.pages_needed(len(req.prompt)) - len(shared)
+                    if not a.can_allocate(need):
+                        break  # head-of-line blocking: keep FIFO order
+                    a.allocate(req.uid, need, shared=shared)
+                    if shared:
+                        self._c_prefix_hits.inc(len(shared))
+                        self.prefix_hit_pages += len(shared)
+                        shared_rows = min(len(shared) * a.page_size,
+                                          len(req.prompt) - 1)
+                else:
+                    need = a.pages_needed(
+                        len(req.prompt) + req.max_new_tokens)
+                    if not a.can_allocate(need):
+                        break  # head-of-line blocking: keep FIFO order
+                    a.allocate(req.uid, need)
             self.queue.popleft()
             slot.request = req
             slot.pos = len(req.prompt)
@@ -246,7 +312,13 @@ class Scheduler:
             slot.admit_time = now
             slot.first_token_time = 0.0
             slot.last_token_time = 0.0
-            slot.prefill_pos = 0 if chunked else len(req.prompt)
+            slot.prefill_pos = shared_rows if chunked else len(req.prompt)
+            slot.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            resume = self._resume.pop(req.uid, None)
+            if resume is not None:
+                (slot.generated, slot.rng, slot.first_token_time,
+                 slot.last_token_time) = resume
             rec = self.records.get(req.uid)
             if rec is not None:
                 rec.t_admit = now
@@ -255,6 +327,52 @@ class Scheduler:
             admitted.append(slot)
         self._update_page_gauges()
         return admitted
+
+    # -- preemption (kv_policy="grow") --------------------------------------
+    def preemption_victim(self, exclude: Sequence[int] = ()) -> \
+            Optional[Slot]:
+        """The youngest-admitted busy slot (highest ``admit_seq``) not in
+        ``exclude`` — the LRU-style eviction choice: it has received the
+        least service, so recompute-on-resume re-prefills the fewest
+        rows, and re-queueing it at the head preserves global FIFO
+        (everything still queued is younger than any admitted slot)."""
+        busy = [s for s in self.slots
+                if s.busy and s.index not in exclude]
+        if not busy:
+            return None
+        return max(busy, key=lambda s: s.admit_seq)
+
+    def preempt(self, slot: Slot, now: float = 0.0) -> Request:
+        """Evict ``slot`` (recompute-on-resume): release its pages, stash
+        its sampling state, and re-queue the request AT THE HEAD with the
+        tokens generated so far appended to the prompt — on re-admission
+        chunked prefill rebuilds the KV rows from the extended prompt
+        (token-exact: KV is a pure function of the token prefix) and
+        decode continues with the stashed rng, so greedy and stochastic
+        outputs both match the never-preempted run.  Returns the
+        re-queued request."""
+        req = slot.request
+        if req is None:
+            raise ValueError(f"slot {slot.index} is not busy")
+        if self.allocator is not None:
+            self.allocator.release(req.uid)
+        resumed = dataclasses.replace(
+            req, prompt=list(req.prompt) + list(slot.generated))
+        self._resume[req.uid] = (slot.generated, slot.rng,
+                                 slot.first_token_time,
+                                 slot.last_token_time)
+        self.queue.appendleft(resumed)
+        rec = self.records.get(req.uid)
+        if rec is not None:
+            rec.status = "queued"
+            rec.preemptions += 1
+        self._c_preemptions.inc()
+        self.preemption_count += 1
+        slot.request = None
+        slot.rng = None
+        slot.generated = []
+        self._update_page_gauges()
+        return resumed
 
     def record_token(self, slot: Slot, token: int, now: float = 0.0) -> None:
         rec = self.records.get(slot.request.uid)

@@ -2,7 +2,13 @@
 PagedKV geometry/layout ops, page-gated admission policy, and token-exact
 parity of the paged engine against the contiguous oracle — including
 chunked prefill of prompts longer than one chunk and a page pool smaller
-than full backing."""
+than full backing.
+
+ISSUE 10 additions: the grow-on-demand path (lazy ``extend`` at page
+boundaries, LRU preemption with recompute-on-resume, ref-counted
+prefix sharing with copy-on-write) — allocator- and scheduler-level
+here; the engine-level differential fuzz harness lives in
+``tests/test_kvcache_fuzz.py``."""
 
 import dataclasses
 
@@ -18,7 +24,7 @@ from repro.launch.serve import Engine
 from repro.models import transformer as T
 from repro.runtime.kvcache import (NULL_PAGE, BlockAllocator, PagedKV,
                                    paged_view, paged_write_chunk,
-                                   paged_write_rows)
+                                   paged_write_rows, prefix_keys)
 from repro.runtime.scheduler import Request, SamplingParams, Scheduler
 
 
@@ -42,7 +48,9 @@ def test_allocator_basics_and_accounting():
 
 def test_allocator_pages_needed_rounds_up():
     a = BlockAllocator(n_pages=4, page_size=8)
-    assert a.pages_needed(0) == 1   # even an empty request holds a page
+    # ISSUE 10 regression: zero tokens need zero pages — the old
+    # max(1, ...) made every empty-prompt admit burn a page for nothing
+    assert a.pages_needed(0) == 0
     assert a.pages_needed(1) == 1
     assert a.pages_needed(8) == 1
     assert a.pages_needed(9) == 2
@@ -58,9 +66,11 @@ def test_allocator_rejects_double_alloc_and_overflow():
     with pytest.raises(MemoryError):
         a.allocate(2, 2)             # only 1 page free
     with pytest.raises(ValueError):
-        a.allocate(3, 0)             # chains are >= 1 page
+        a.allocate(3, -1)            # negative page count
+    assert a.allocate(3, 0) == []    # empty chain is legal (grow policy)
     with pytest.raises(KeyError):
         a.release(99)                # never allocated
+    a.release(3)
     a.check()
 
 
@@ -76,6 +86,144 @@ def test_allocator_extend_grows_chain():
     with pytest.raises(KeyError):
         a.extend(7, 1)
     a.check()
+
+
+def test_allocator_extend_exhaustion_keeps_chain_intact():
+    """The grow-on-demand failure mode: a failed extend must raise
+    MemoryError and leave the chain exactly as it was (the engine
+    preempts a victim and retries)."""
+    a = BlockAllocator(n_pages=5, page_size=2)       # 4 usable
+    chain = a.allocate(0, 3)
+    a.allocate(1, 1)
+    with pytest.raises(MemoryError):
+        a.extend(0, 2)               # only 0 free
+    assert a.chain(0) == chain       # untouched by the failed extend
+    a.check()
+    a.release(1)
+    assert a.extend(0, 1)            # now it fits
+    a.check()
+
+
+def test_allocator_free_list_is_lifo():
+    """Recently freed pages are re-issued first — keeps the hot set
+    small and makes use-after-free loud."""
+    a = BlockAllocator(n_pages=8, page_size=2)
+    a.allocate(0, 2)
+    mid = a.allocate(1, 2)
+    a.allocate(2, 2)
+    freed = a.release(1)
+    assert freed == mid
+    # LIFO: the re-issue pops the most recently freed page last-in-first
+    assert a.extend(0, 2) == mid[::-1]
+    a.check()
+
+
+def test_allocator_interleaved_extend_release_invariants():
+    a = BlockAllocator(n_pages=10, page_size=2)
+    a.allocate(0, 1)
+    a.allocate(1, 2)
+    for _ in range(3):
+        a.extend(0, 1)
+        a.check()
+    a.release(1)
+    a.check()
+    a.extend(0, 2)
+    a.check()
+    assert a.chain_len(0) == 6
+    a.release(0)
+    a.check()
+    assert a.free_pages == a.capacity
+
+
+def test_allocator_refcounts_shared_and_fork():
+    a = BlockAllocator(n_pages=8, page_size=2)
+    parent = a.allocate(0, 3)
+    child = a.allocate(1, 1, shared=parent[:2])      # adopt 2 pages
+    assert child[:2] == parent[:2]
+    assert a.page_ref(parent[0]) == 2
+    assert a.page_shared(0, 0) and a.page_shared(1, 0)
+    assert not a.page_shared(0, 2)
+    a.check()
+    # releasing the parent keeps the shared pages alive for the child
+    freed = a.release(0)
+    assert freed == [parent[2]]
+    assert a.page_ref(parent[0]) == 1
+    a.check()
+    # fork clones the whole chain by reference
+    forked = a.fork(1, 2)
+    assert forked == a.chain(1)
+    assert all(a.page_ref(p) == 2 for p in forked)
+    with pytest.raises(ValueError):
+        a.fork(1, 2)                 # child already holds a chain
+    with pytest.raises(KeyError):
+        a.fork(99, 3)
+    a.release(1)
+    a.release(2)
+    a.check()
+    assert a.free_pages == a.capacity
+
+
+def test_allocator_cow_page():
+    a = BlockAllocator(n_pages=6, page_size=2)       # 5 usable
+    chain = a.allocate(0, 2)
+    a.fork(0, 1)
+    # shared page: cow swaps in a fresh one, old stays with the peer
+    old_new = a.cow_page(0, 0)
+    assert old_new is not None
+    old, new = old_new
+    assert old == chain[0] and new not in chain
+    assert a.chain(0)[0] == new and a.chain(1)[0] == old
+    assert a.page_ref(old) == 1 and a.page_ref(new) == 1
+    a.check()
+    # uniquely-held page: no copy needed
+    assert a.cow_page(0, 0) is None
+    assert a.cow_page(0, 1) is not None    # break the remaining share
+    a.check()
+    # exhausted pool: cow must raise, not corrupt
+    a.allocate(2, 1)                 # takes the last free page
+    a.fork(2, 3)
+    with pytest.raises(MemoryError):
+        a.cow_page(2, 0)             # shared, but 0 pages free
+    a.check()
+
+
+def test_prefix_keys_page_aligned_and_tail():
+    toks = list(range(10))
+    keys = prefix_keys(toks, page_size=4)
+    assert len(keys) == 3            # 2 full pages + tail
+    # full-page keys depend only on the token prefix through the page
+    assert keys[:2] == prefix_keys(toks[:8] + [99, 98], 4)[:2]
+    # the tail key is exact-length/exact-content
+    assert keys[2] != prefix_keys(toks + [0], 4)[2]
+    assert prefix_keys(toks[:8], 4) == keys[:2]      # no tail when aligned
+    assert prefix_keys([], 4) == []
+
+
+def test_allocator_prefix_index_register_match_drop():
+    a = BlockAllocator(n_pages=8, page_size=2)
+    toks = [7, 3, 9, 1, 4]           # 2 full pages + 1 tail
+    keys = prefix_keys(toks, 2)
+    a.allocate(0, 3)
+    assert a.register_chain_prefix(0, keys) == 3
+    assert a.match_prefix(keys) == a.chain(0)
+    # a prefix of the prompt matches only its full pages
+    assert a.match_prefix(prefix_keys(toks[:4], 2)) == a.chain(0)[:2]
+    # first registration wins; re-registering is a no-op
+    assert a.register_chain_prefix(0, keys) == 0
+    a.check()
+    # adopting via allocate(shared=) bumps refcounts
+    shared = a.match_prefix(keys)
+    a.allocate(1, 0, shared=shared)
+    assert all(a.page_ref(p) == 2 for p in shared)
+    a.check()
+    # entries die with the page: release both holders -> no matches
+    a.release(0)
+    assert a.match_prefix(keys) == shared            # child keeps it live
+    a.release(1)
+    assert a.match_prefix(keys) == []
+    a.check()
+    with pytest.raises(ValueError):
+        a.register_prefix(keys[0], 99)               # dead page
 
 
 def test_allocator_null_page_never_issued():
@@ -262,6 +410,92 @@ def test_chunked_admit_sets_prefill_state():
     slot.prefill_pos = 5                    # engine finished the chunks
     assert not slot.prefilling
     assert s.decoding_slots() == [slot]
+
+
+# ---------------------------------------------------------------------------
+# grow-on-demand admission + preemption (scheduler policy, no jax)
+# ---------------------------------------------------------------------------
+
+def test_grow_admission_uses_prompt_footprint_only():
+    alloc = BlockAllocator(n_pages=5, page_size=4)   # 4 usable pages
+    s = Scheduler(4, allocator=alloc, kv_policy="grow")
+    # worst-case footprints are 3+3 pages (would NOT both fit under
+    # reserve); prompt footprints are 2+1 and fit together under grow
+    s.submit_many([_req(0, 8, max_new=4), _req(1, 1, max_new=8)])
+    admitted = s.admit(chunked=True)
+    assert [sl.request.uid for sl in admitted] == [0, 1]
+    assert alloc.chain_len(0) == 2 and alloc.chain_len(1) == 1
+    assert alloc.free_pages == 1
+    alloc.check()
+
+
+def test_preemption_victim_is_youngest_admitted():
+    alloc = BlockAllocator(n_pages=9, page_size=4)
+    s = Scheduler(3, allocator=alloc, kv_policy="grow")
+    s.submit_many([_req(0, 4), _req(1, 4), _req(2, 4)])
+    s.admit(chunked=True)
+    victim = s.preemption_victim()
+    assert victim.request.uid == 2          # last admitted, least service
+    assert s.preemption_victim(exclude=(victim.index,)).request.uid == 1
+
+
+def test_preempt_requeues_at_head_with_generated_suffix():
+    alloc = BlockAllocator(n_pages=9, page_size=4)
+    s = Scheduler(2, allocator=alloc, kv_policy="grow")
+    s.submit_many([_req(0, 4, max_new=6), _req(1, 3, max_new=2),
+                   _req(2, 2, max_new=2)])
+    s.admit(chunked=True)
+    slot = s.slots[0]
+    slot.prefill_pos = 4                    # prefill done
+    for t in (11, 12, 13):
+        s.record_token(slot, t)
+    rng_state = slot.rng.bit_generator.state
+    s.preempt(slot)
+    # pages released, request back at the HEAD (before still-queued uid 2)
+    assert not slot.busy
+    assert 0 not in alloc.live_uids()
+    assert [r.uid for r in s.queue] == [0, 2]
+    resumed = s.queue[0]
+    assert list(resumed.prompt) == list(_req(0, 4).prompt) + [11, 12, 13]
+    assert resumed.max_new_tokens == 6
+    assert s.records[0].status == "queued"
+    assert s.records[0].preemptions == 1
+    alloc.check()
+    # re-admission restores generated tokens and the sampling rng, so
+    # decode continues exactly where it left off
+    (slot2,) = s.admit(chunked=True)
+    assert slot2.request.uid == 0
+    assert slot2.generated == [11, 12, 13]
+    assert slot2.rng.bit_generator.state == rng_state
+    assert slot2.pos == 7                   # len(prompt + generated)
+    # done-accounting still counts against the ORIGINAL budget
+    for t in (14, 15, 16):
+        s.record_token(slot2, t)
+    assert slot2.done
+    s.retire_done()
+    assert s.finished[0] == [11, 12, 13, 14, 15, 16]
+    alloc.check()
+
+
+def test_grow_admission_adopts_registered_prefix_pages():
+    alloc = BlockAllocator(n_pages=9, page_size=2)
+    s = Scheduler(2, allocator=alloc, kv_policy="grow")
+    parent = _req(0, 6, max_new=2)
+    s.submit(parent)
+    s.admit(chunked=True)
+    # engine finished the parent's prefill and published its pages
+    alloc.register_chain_prefix(0, prefix_keys(parent.prompt, 2))
+    dup = _req(1, 6, max_new=2)             # same prompt (same _req range)
+    s.submit(dup)
+    (slot,) = s.admit(chunked=True)
+    assert slot.request.uid == 1
+    assert alloc.chain(1) == alloc.chain(0)  # all 3 pages adopted
+    assert s.prefix_hit_pages == 3
+    # prefill restarts at the last prompt token, never a full skip: the
+    # final logits row must come from a real chunk forward (and its
+    # shared-page write is what triggers copy-on-write in the engine)
+    assert slot.prefill_pos == 5
+    alloc.check()
 
 
 # ---------------------------------------------------------------------------
