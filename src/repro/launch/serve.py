@@ -473,6 +473,7 @@ class Engine:
         ps = geo.page_size
         n_chunks = 0
         n_cow = 0
+        n_cow_inplace = 0
         n_grown = 0
         max_concurrent = 0
         prefillq: "deque" = deque()  # slots mid-prompt, FIFO
@@ -506,13 +507,20 @@ class Engine:
             """Break sharing of chain page ``blk`` before ``slot``
             writes there.  Returns False when the slot lost its chain
             while freeing a page for the copy."""
-            nonlocal cache, n_cow
+            nonlocal cache, n_cow, n_cow_inplace
             uid = slot.request.uid
             if not alloc.page_shared(uid, blk):
                 return True
             if alloc.free_pages < 1 and not _ensure_free(1, slot):
                 return False
-            old, new = alloc.cow_page(uid, blk)
+            cow = alloc.cow_page(uid, blk)
+            if cow is None:
+                # _ensure_free just preempted the page's only co-holder
+                # (the youngest slot is typically the prefix-adopter):
+                # the page is uniquely held now — write in place, no copy
+                n_cow_inplace += 1
+                return True
+            old, new = cow
             with tracer.span("kv.cow", uid=uid, block=blk):
                 cache = self._copy_page_jit(cache, jnp.int32(old),
                                             jnp.int32(new))
@@ -693,6 +701,7 @@ class Engine:
             "preemptions": sched.preemption_count,
             "prefix_hit_pages": sched.prefix_hit_pages,
             "cow_copies": n_cow,
+            "cow_in_place": n_cow_inplace,
             "grown_pages": n_grown,
             "ttft_s": dict(sched.ttft),
         }

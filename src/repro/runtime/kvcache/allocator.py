@@ -54,6 +54,7 @@ without compiling a model.
 
 from __future__ import annotations
 
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["NULL_PAGE", "BlockAllocator", "prefix_keys"]
@@ -65,7 +66,7 @@ __all__ = ["NULL_PAGE", "BlockAllocator", "prefix_keys"]
 NULL_PAGE = 0
 
 
-def prefix_keys(tokens: Sequence[int], page_size: int) -> List[int]:
+def prefix_keys(tokens: Sequence[int], page_size: int) -> List[bytes]:
     """Content keys for the pages a prompt occupies, aligned with the
     chain: key ``i`` identifies the *content* of chain page ``i``.
 
@@ -76,13 +77,29 @@ def prefix_keys(tokens: Sequence[int], page_size: int) -> List[int]:
     keyed by the exact ``(length, tokens)`` pair — only an identical
     prompt may share it, and the sharer must copy-on-write before its
     own writes land there.  Returns ``pages_needed(len(tokens))`` keys.
+
+    Keys are 128-bit truncations of a SHA-256 over the little-endian
+    int64 token bytes (one running hash, extended page by page, so the
+    whole prompt is digested once).  The builtin ``hash()`` would NOT
+    do: a 64-bit collision between two distinct prompts makes a later
+    request silently adopt the wrong live KV pages and emit wrong
+    tokens — undetectable by :meth:`BlockAllocator.check` — so the
+    content key must be collision-resistant by construction.
     """
-    toks = tuple(int(t) for t in tokens)
+    toks = [int(t) for t in tokens]
     n = len(toks)
-    keys = [hash(("page", i, toks[:(i + 1) * page_size]))
-            for i in range(n // page_size)]
+    keys: List[bytes] = []
+    run = hashlib.sha256()
+    for i in range(n // page_size):
+        for t in toks[i * page_size:(i + 1) * page_size]:
+            run.update(t.to_bytes(8, "little", signed=True))
+        keys.append(b"p" + run.digest()[:16])
     if n % page_size:
-        keys.append(hash(("tail", n, toks)))
+        tail = run.copy()
+        tail.update(b"tail:%d:" % n)
+        for t in toks[(n // page_size) * page_size:]:
+            tail.update(t.to_bytes(8, "little", signed=True))
+        keys.append(b"t" + tail.digest()[:16])
     return keys
 
 
@@ -101,9 +118,9 @@ class BlockAllocator:
         # LIFO free list over pages [1, n_pages); page 0 stays reserved.
         self._free: List[int] = list(range(n_pages - 1, NULL_PAGE, -1))
         self._chains: Dict[int, List[int]] = {}
-        self._ref: Dict[int, int] = {}       # live page -> holder count
-        self._prefix: Dict[int, int] = {}    # content key -> live page
-        self._page_key: Dict[int, int] = {}  # live page -> its content key
+        self._ref: Dict[int, int] = {}         # live page -> holder count
+        self._prefix: Dict[bytes, int] = {}    # content key -> live page
+        self._page_key: Dict[int, bytes] = {}  # live page -> content key
 
     # -- accounting -----------------------------------------------------
     @property
@@ -268,7 +285,7 @@ class BlockAllocator:
         if key is not None:
             del self._prefix[key]
 
-    def register_prefix(self, key: int, page: int) -> bool:
+    def register_prefix(self, key: bytes, page: int) -> bool:
         """Publish ``page`` as the holder of content ``key`` so later
         admissions can share it.  First writer wins: an existing entry
         for the key (or a page already published under another key) is
@@ -283,7 +300,7 @@ class BlockAllocator:
         return True
 
     def register_chain_prefix(self, uid: int,
-                              keys: Sequence[int]) -> int:
+                              keys: Sequence[bytes]) -> int:
         """Register ``uid``'s chain pages under their content keys
         (:func:`prefix_keys` of the prompt, computed by the caller once
         prefill has written the rows).  Returns how many new entries
@@ -296,7 +313,7 @@ class BlockAllocator:
             published += bool(self.register_prefix(key, chain[i]))
         return published
 
-    def match_prefix(self, keys: Sequence[int]) -> List[int]:
+    def match_prefix(self, keys: Sequence[bytes]) -> List[int]:
         """Longest run of live indexed pages covering ``keys`` from the
         start — the pages a new admission can adopt as its shared chain
         prefix (refcounts are bumped by :meth:`allocate`, not here)."""

@@ -202,6 +202,12 @@ class Scheduler:
         # preempted request, restored verbatim at re-admission so sampling
         # and latency accounting continue as if never evicted
         self._resume: Dict[int, Tuple] = {}
+        # uid -> the ORIGINAL prompt, pinned at first preemption: a
+        # resumed request's .prompt already embeds the earlier generated
+        # tokens, so a second preemption must rebuild from the original
+        # (orig + ALL generated), never append to the embedded copy —
+        # that would duplicate the first round of tokens in the prompt
+        self._orig_prompt: Dict[int, List[int]] = {}
         reg = telemetry.registry
         self._c_submitted = reg.counter("serve.requests_submitted")
         self._c_finished = reg.counter("serve.requests_finished")
@@ -356,8 +362,14 @@ class Scheduler:
             raise ValueError(f"slot {slot.index} is not busy")
         if self.allocator is not None:
             self.allocator.release(req.uid)
+        # slot.generated always holds EVERY token generated so far (the
+        # resume stash restores it across evictions), so the rebuilt
+        # prompt is original + all-generated even on a repeat preemption
+        # of an already-resumed request (whose req.prompt embeds the
+        # earlier tokens and must not be appended to again).
+        orig = self._orig_prompt.setdefault(req.uid, list(req.prompt))
         resumed = dataclasses.replace(
-            req, prompt=list(req.prompt) + list(slot.generated))
+            req, prompt=list(orig) + list(slot.generated))
         self._resume[req.uid] = (slot.generated, slot.rng,
                                  slot.first_token_time,
                                  slot.last_token_time)
@@ -411,6 +423,7 @@ class Scheduler:
                     self.telemetry.emit(rec.to_event())
                 if self.allocator is not None:
                     self.allocator.release(slot.request.uid)
+                self._orig_prompt.pop(slot.request.uid, None)
                 self._c_finished.inc()
                 retired.append(dataclasses.replace(slot))
                 slot.request = None

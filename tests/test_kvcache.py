@@ -199,6 +199,22 @@ def test_prefix_keys_page_aligned_and_tail():
     assert prefix_keys([], 4) == []
 
 
+def test_prefix_keys_collision_resistant_digest():
+    """Regression: the keys were builtin ``hash()`` values, and builtin
+    hashes collide — ``hash(-1) == hash(-2)`` in CPython, so the old
+    tuple-hash keys for the prompts ``[-1]`` and ``[-2]`` were EQUAL and
+    a later request would silently adopt the wrong live pages (wrong
+    tokens, invisible to ``check()``).  The sha256 digests must tell
+    such prompts apart."""
+    assert hash((-1,)) == hash((-2,))    # the builtin trap the digest avoids
+    assert prefix_keys([-1], 4) != prefix_keys([-2], 4)
+    keys = prefix_keys(list(range(10)), 4)
+    assert all(isinstance(k, bytes) for k in keys)
+    # full-page and tail keys live in disjoint namespaces: the same
+    # token run keyed as a full page never matches it keyed as a tail
+    assert prefix_keys([1, 2, 3, 4], 4) != prefix_keys([1, 2, 3, 4], 5)
+
+
 def test_allocator_prefix_index_register_match_drop():
     a = BlockAllocator(n_pages=8, page_size=2)
     toks = [7, 3, 9, 1, 4]           # 2 full pages + 1 tail
@@ -474,6 +490,45 @@ def test_preempt_requeues_at_head_with_generated_suffix():
     assert slot2.done
     s.retire_done()
     assert s.finished[0] == [11, 12, 13, 14, 15, 16]
+    alloc.check()
+
+
+def test_preempt_twice_rebuilds_from_original_prompt():
+    """Regression: preempting an already-resumed request must rebuild
+    ``original_prompt + ALL generated`` — the resumed request's .prompt
+    already embeds the first round of generated tokens, and appending
+    ``slot.generated`` to it again duplicated that round (corrupt KV
+    context, wrong positions, possible max_seq overflow)."""
+    alloc = BlockAllocator(n_pages=17, page_size=4)
+    s = Scheduler(1, allocator=alloc, kv_policy="grow")
+    orig = _req(0, 4, max_new=8)
+    s.submit(orig)
+    s.admit(chunked=True)
+    slot = s.slots[0]
+    slot.prefill_pos = 4
+    for t in (11, 12):
+        s.record_token(slot, t)
+    s.preempt(slot)
+    assert list(s.queue[0].prompt) == list(orig.prompt) + [11, 12]
+    # resume, generate two more, preempt AGAIN: the rebuilt prompt must
+    # hold each generated token exactly once
+    (slot,) = s.admit(chunked=True)
+    slot.prefill_pos = len(slot.request.prompt)
+    for t in (13, 14):
+        s.record_token(slot, t)
+    s.preempt(slot)
+    resumed = s.queue[0]
+    assert list(resumed.prompt) == list(orig.prompt) + [11, 12, 13, 14]
+    assert s.records[0].preemptions == 2
+    alloc.check()
+    # third leg runs to completion against the ORIGINAL budget
+    (slot,) = s.admit(chunked=True)
+    assert slot.generated == [11, 12, 13, 14]
+    for t in (15, 16, 17, 18):
+        s.record_token(slot, t)
+    assert slot.done
+    s.retire_done()
+    assert s.finished[0] == [11, 12, 13, 14, 15, 16, 17, 18]
     alloc.check()
 
 

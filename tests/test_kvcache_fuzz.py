@@ -209,6 +209,33 @@ def test_fuzz_forced_preemption_parity():
     assert stats["grown_pages"] >= 1, stats
 
 
+def test_fuzz_forced_cow_in_place_parity():
+    """Regression for the CoW/preemption crash: with the pool EXACTLY
+    full (parent 3 pages + filler 4 = 7 usable), the exact duplicate
+    admits by pure adoption (0 fresh pages), so when the parent's first
+    decode write hits the shared tail page, ``_cow`` finds no free page
+    and ``_ensure_free`` preempts the duplicate — the page's only
+    co-holder — before ``cow_page`` runs.  ``cow_page`` then returns
+    ``None`` (uniquely held again); the engine must write in place, not
+    unpack the ``None`` and crash.  Token parity must still hold."""
+    rng = np.random.default_rng(3)
+    parent = tuple(int(t) for t in rng.integers(0, VOCAB_DRAW, 10))
+    filler = tuple(int(t) for t in rng.integers(0, VOCAB_DRAW, 16))
+    sched = Schedule(n_pages=8, requests=(
+        # 3 pages; gen 3 keeps the parent decoding into its tail page
+        # for one iteration AFTER the duplicate adopts (gen 2 would
+        # retire it the same iteration it registers, emptying the index
+        # before the duplicate's next admission attempt)
+        (parent, 3),
+        (filler, 1),      # 4 pages: fills the pool, prefills 2 chunks
+        (parent, 2),      # admitted by adoption once the parent registers
+    ))
+    stats = run_schedule(sched)
+    assert stats["prefix_hit_pages"] >= 3, stats
+    assert stats["cow_in_place"] >= 1, stats
+    assert stats["preemptions"] >= 2, stats   # duplicate, then filler
+
+
 def test_fuzz_forced_cow_fork_parity():
     """Deterministic pin of the CoW guarantee: a duplicate admitted
     after its parent's prefill has registered must adopt the parent's
